@@ -1,0 +1,46 @@
+"""Fig 10 ablation: ZM-index -> LO (learned order) -> +C1 (sort dim) ->
++C2 (recursive query splitting) -> LMSFC (DP paging)."""
+from __future__ import annotations
+
+from repro.baselines.zm import build_zm_index
+from repro.core.index import IndexConfig, LMSFCIndex
+from repro.core.query import query_count
+
+from .common import learn_theta_for, record, standard_suite, time_queries
+
+
+def run(datasets=("osm", "nyc", "stock")):
+    rows = []
+    for ds in datasets:
+        data, (Ls_tr, Us_tr), (Ls, Us), K = standard_suite(ds)
+        theta, _, _ = learn_theta_for(data, Ls_tr, Us_tr, K)
+
+        variants = {
+            "zm-index": dict(theta=None, paging="fixed", sort_dim=False,
+                             split=False),
+            "LO": dict(theta=theta, paging="fixed", sort_dim=False,
+                       split=False),
+            "LO+C1(sortdim)": dict(theta=theta, paging="fixed",
+                                   sort_dim=True, split=False),
+            "LO+C2(+RQS)": dict(theta=theta, paging="fixed", sort_dim=True,
+                                split=True),
+            "LMSFC(+DP)": dict(theta=theta, paging="dp", sort_dim=True,
+                               split=True),
+        }
+        for name, v in variants.items():
+            cfg = IndexConfig(paging=v["paging"], use_sort_dim=v["sort_dim"],
+                              use_query_split=v["split"],
+                              skipping="rqs" if v["split"] else "none")
+            idx = LMSFCIndex.build(data, theta=v["theta"], cfg=cfg,
+                                   workload=(Ls_tr, Us_tr), K=K)
+            us, st = time_queries(lambda l, u: query_count(idx, l, u), Ls, Us)
+            rows.append({"name": f"{ds}/{name}", "us_per_query": us,
+                         "pages": st["pages_accessed"],
+                         "scanned": st["points_scanned"],
+                         "fp_points": st["false_positives"]})
+    record("fig10_ablation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,89 @@
+"""Fig 11 (dataset sample rate), Fig 12 (workload size), Table 6 (index
+sizes), Table 7 (learning + construction times)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines.flood import build_flood
+from repro.baselines.rstar import build_rtree
+from repro.baselines.zm import build_zm_index
+from repro.core.index import IndexConfig, LMSFCIndex
+from repro.core.query import query_count
+from repro.core.smbo import learn_sfc
+
+from .common import (SMBO_BUDGET, build_lmsfc, record, standard_suite,
+                     time_queries)
+
+
+def run_learning_curves():
+    rows = []
+    data, (Ls_tr, Us_tr), (Ls, Us), K = standard_suite("osm")
+    rng = np.random.default_rng(0)
+    # Fig 11: sample rate sweep
+    for frac in (0.005, 0.025, 0.05, 0.10):
+        n_s = max(500, int(len(data) * frac))
+        samp = data[rng.choice(len(data), size=n_s, replace=False)]
+        t0 = time.perf_counter()
+        res = learn_sfc(samp, Ls_tr[:100], Us_tr[:100], K=K, **SMBO_BUDGET)
+        learn_s = time.perf_counter() - t0
+        idx = LMSFCIndex.build(data, theta=res.theta_best,
+                               cfg=IndexConfig(paging="heuristic"),
+                               workload=(Ls_tr, Us_tr), K=K)
+        us, _ = time_queries(lambda l, u: query_count(idx, l, u), Ls, Us)
+        rows.append({"name": f"fig11/sample={frac:g}", "us_per_query": us,
+                     "learn_s": learn_s})
+    record("fig11_sample_rate", rows)
+
+    rows = []
+    samp = data[rng.choice(len(data), size=max(500, len(data) // 20),
+                           replace=False)]
+    for wl in (64, 125, 250, 500):
+        wq = min(wl, len(Ls_tr))
+        t0 = time.perf_counter()
+        res = learn_sfc(samp, Ls_tr[:wq], Us_tr[:wq], K=K, **SMBO_BUDGET)
+        learn_s = time.perf_counter() - t0
+        idx = LMSFCIndex.build(data, theta=res.theta_best,
+                               cfg=IndexConfig(paging="heuristic"),
+                               workload=(Ls_tr[:wq], Us_tr[:wq]), K=K)
+        us, _ = time_queries(lambda l, u: query_count(idx, l, u), Ls, Us)
+        rows.append({"name": f"fig12/workload={wl}", "us_per_query": us,
+                     "learn_s": learn_s})
+    record("fig12_workload_size", rows)
+    return rows
+
+
+def run_sizes_and_build():
+    rows = []
+    for ds in ("osm", "nyc", "stock"):
+        data, train_wl, test_wl, K = standard_suite(ds)
+        t0 = time.perf_counter()
+        rt = build_rtree(data)
+        rt_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        zm = build_zm_index(data, K=K)
+        zm_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fl = build_flood(data, train_wl, K=K)
+        fl_s = time.perf_counter() - t0
+        lm, theta, learn_s, build_s = build_lmsfc(data, train_wl, K,
+                                                  paging="heuristic")
+        rows.append({"name": f"tab6_7/{ds}", "us_per_query": "",
+                     "rstar_size_mb": rt.index_size_bytes() / 1e6,
+                     "zm_size_mb": zm.index_size_bytes() / 1e6,
+                     "flood_size_mb": fl.index_size_bytes() / 1e6,
+                     "lmsfc_size_mb": lm.index_size_bytes() / 1e6,
+                     "rstar_build_s": rt_s, "zm_build_s": zm_s,
+                     "flood_build_s": fl_s,
+                     "lmsfc_learn_s": learn_s, "lmsfc_build_s": build_s})
+    record("tab6_7_sizes_construction", rows)
+    return rows
+
+
+def run():
+    return run_learning_curves() + run_sizes_and_build()
+
+
+if __name__ == "__main__":
+    run()

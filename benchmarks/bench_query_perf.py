@@ -1,0 +1,61 @@
+"""Fig 6 + §7.2 FP counts: query performance of R*-tree / ZM-index / Flood /
+LMSFC on the three datasets."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines.flood import build_flood
+from repro.baselines.rstar import build_rtree
+from repro.baselines.zm import build_zm_index
+from repro.core.query import query_count
+
+from .common import build_lmsfc, record, standard_suite, time_queries
+
+
+def run(datasets=("osm", "nyc", "stock")):
+    rows = []
+    for ds in datasets:
+        data, train_wl, (Ls, Us), K = standard_suite(ds)
+
+        rt = build_rtree(data)
+        us, st = time_queries(rt.query, Ls, Us)
+        rows.append({"name": f"{ds}/rstar-tree", "us_per_query": us,
+                     "fp_points": st["false_positives"],
+                     "pages": st["pages_accessed"]})
+
+        zm = build_zm_index(data, K=K)
+        us, st = time_queries(lambda l, u: query_count(zm, l, u), Ls, Us)
+        rows.append({"name": f"{ds}/zm-index", "us_per_query": us,
+                     "fp_points": st["false_positives"],
+                     "pages": st["pages_accessed"]})
+
+        fl = build_flood(data, train_wl, K=K)
+        us, st = time_queries(fl.query, Ls, Us)
+        rows.append({"name": f"{ds}/flood", "us_per_query": us,
+                     "fp_points": st["false_positives"],
+                     "pages": st["pages_accessed"]})
+
+        lm, theta, learn_s, build_s = build_lmsfc(data, train_wl, K)
+        us, st = time_queries(lambda l, u: query_count(lm, l, u), Ls, Us)
+        rows.append({"name": f"{ds}/lmsfc", "us_per_query": us,
+                     "fp_points": st["false_positives"],
+                     "pages": st["pages_accessed"],
+                     "learn_s": learn_s, "build_s": build_s})
+
+        base = [r for r in rows if r["name"].startswith(ds)]
+        lm_t = base[-1]["us_per_query"]
+        runner_up = min(r["us_per_query"] for r in base[:-1])
+        rows.append({"name": f"{ds}/speedup_vs_runner_up",
+                     "us_per_query": "",
+                     "speedup": runner_up / lm_t,
+                     "speedup_vs_rstar": base[0]["us_per_query"] / lm_t,
+                     "speedup_vs_zm": base[1]["us_per_query"] / lm_t,
+                     "speedup_vs_flood": base[2]["us_per_query"] / lm_t})
+    record("fig6_query_perf", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

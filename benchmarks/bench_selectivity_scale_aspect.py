@@ -1,0 +1,74 @@
+"""Fig 7 (selectivity), Fig 8 (dataset size), Fig 9 (aspect ratio)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.baselines.flood import build_flood
+from repro.baselines.rstar import build_rtree
+from repro.baselines.zm import build_zm_index
+from repro.core.query import query_count
+from repro.data.synth import make_dataset
+from repro.data.workload import (make_workload, scale_to_selectivity,
+                                 with_aspect_ratio)
+from repro.core.theta import default_K
+
+from .common import BENCH_N, build_lmsfc, record, standard_suite, time_queries
+
+
+def _all_indexes(data, train_wl, K, theta=None):
+    zm = build_zm_index(data, K=K)
+    fl = build_flood(data, train_wl, K=K)
+    lm, theta, _, _ = build_lmsfc(data, train_wl, K, theta=theta)
+    rt = build_rtree(data)
+    return {"rstar-tree": rt.query,
+            "zm-index": lambda l, u: query_count(zm, l, u),
+            "flood": fl.query,
+            "lmsfc": lambda l, u: query_count(lm, l, u)}, theta
+
+
+def run_selectivity():
+    rows = []
+    data, train_wl, (Ls, Us), K = standard_suite("osm")
+    idx, theta = _all_indexes(data, train_wl, K)
+    for sel in (1e-5, 1e-4, 1e-3, 1e-2):
+        L2, U2 = scale_to_selectivity(data, Ls, Us, sel, K=K)
+        for name, fn in idx.items():
+            us, st = time_queries(fn, L2[:100], U2[:100])
+            rows.append({"name": f"sel={sel:g}/{name}", "us_per_query": us,
+                         "mean_result": st["result"]})
+    record("fig7_selectivity", rows)
+    return rows
+
+
+def run_scalability():
+    rows = []
+    for n in (BENCH_N // 4, BENCH_N // 2, BENCH_N, BENCH_N * 2):
+        data, train_wl, (Ls, Us), K = standard_suite("osm", n=n)
+        idx, _ = _all_indexes(data, train_wl, K)
+        for name, fn in idx.items():
+            us, _ = time_queries(fn, Ls[:100], Us[:100])
+            rows.append({"name": f"n={n}/{name}", "us_per_query": us})
+    record("fig8_scalability", rows)
+    return rows
+
+
+def run_aspect():
+    rows = []
+    data, train_wl, (Ls, Us), K = standard_suite("osm")
+    L1, U1 = scale_to_selectivity(data, Ls, Us, 1e-2, K=K)
+    idx, _ = _all_indexes(data, train_wl, K)
+    for ratio in (0.125, 0.5, 1.0, 2.0, 8.0):
+        L2, U2 = with_aspect_ratio(L1, U1, ratio, dim=0, K=K)
+        for name, fn in idx.items():
+            us, _ = time_queries(fn, L2[:100], U2[:100])
+            rows.append({"name": f"ratio={ratio}/{name}", "us_per_query": us})
+    record("fig9_aspect_ratio", rows)
+    return rows
+
+
+def run():
+    return run_selectivity() + run_scalability() + run_aspect()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Table 3 (RQS vs FNZ), Table 4 (k_maxsplit sweep), Table 5 (paging methods
+FP/HP/DP: query time + index size + packing time)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core.index import IndexConfig, LMSFCIndex
+from repro.core.paging import (dp_paging_np, fixed_paging, heuristic_paging,
+                               page_capacity)
+from repro.core.query import query_count
+
+from .common import learn_theta_for, record, standard_suite, time_queries
+
+
+def run_splitting():
+    rows = []
+    data, (Ls_tr, Us_tr), (Ls, Us), K = standard_suite("osm")
+    theta, _, _ = learn_theta_for(data, Ls_tr, Us_tr, K)
+    for label, th in (("zm-index", None), ("lmsfc", theta)):
+        for strat in ("rqs", "fnz"):
+            cfg = IndexConfig(paging="heuristic" if th is not None else "fixed",
+                              skipping=strat, use_query_split=(strat == "rqs"),
+                              use_sort_dim=th is not None)
+            idx = LMSFCIndex.build(data, theta=th, cfg=cfg,
+                                   workload=(Ls_tr, Us_tr), K=K)
+            us, st = time_queries(lambda l, u: query_count(idx, l, u), Ls, Us)
+            rows.append({"name": f"tab3/{label}+{strat.upper()}",
+                         "us_per_query": us,
+                         "index_accesses": st["index_accesses"],
+                         "pages": st["pages_accessed"]})
+    record("tab3_rqs_vs_fnz", rows)
+
+    rows = []
+    for kms in range(0, 6):
+        cfg = IndexConfig(paging="heuristic", k_maxsplit=kms,
+                          use_query_split=kms > 0,
+                          skipping="rqs" if kms > 0 else "none")
+        idx = LMSFCIndex.build(data, theta=theta, cfg=cfg,
+                               workload=(Ls_tr, Us_tr), K=K)
+        us, st = time_queries(lambda l, u: query_count(idx, l, u), Ls, Us)
+        rows.append({"name": f"tab4/k_maxsplit={kms}", "us_per_query": us,
+                     "irrelevant_pages": st["irrelevant_pages"],
+                     "index_accesses": st["index_accesses"]})
+    record("tab4_kmaxsplit", rows)
+    return rows
+
+
+def run_paging():
+    rows = []
+    data, (Ls_tr, Us_tr), (Ls, Us), K = standard_suite("osm")
+    theta, _, _ = learn_theta_for(data, Ls_tr, Us_tr, K)
+    for label, th in (("zm-index", None), ("lmsfc", theta)):
+        for method in ("fixed", "heuristic", "dp"):
+            t0 = time.perf_counter()
+            cfg = IndexConfig(paging=method, use_sort_dim=th is not None,
+                              use_query_split=th is not None)
+            idx = LMSFCIndex.build(data, theta=th, cfg=cfg,
+                                   workload=(Ls_tr, Us_tr), K=K)
+            pack_s = time.perf_counter() - t0
+            us, st = time_queries(lambda l, u: query_count(idx, l, u), Ls, Us)
+            rows.append({"name": f"tab5/{label}+{method}",
+                         "us_per_query": us,
+                         "pack_s": pack_s,
+                         "index_size_mb": idx.index_size_bytes() / 1e6,
+                         "num_pages": idx.num_pages})
+    record("tab5_paging", rows)
+    return rows
+
+
+def run():
+    return run_splitting() + run_paging()
+
+
+if __name__ == "__main__":
+    run()

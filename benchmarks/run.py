@@ -1,0 +1,41 @@
+"""Run every paper-table benchmark.  Prints ``name,us_per_call,derived`` CSV.
+
+Sizing via env: REPRO_BENCH_N (points, default 2000000), REPRO_BENCH_Q
+(queries, default 200), REPRO_SMBO_ITERS (default 4).
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bench_ablation, bench_learning_size, bench_query_perf,
+                   bench_selectivity_scale_aspect, bench_serve_engine,
+                   bench_split_paging)
+    suites = [
+        ("fig6_query_perf", bench_query_perf.run),
+        ("fig7_8_9_sel_scale_aspect", bench_selectivity_scale_aspect.run),
+        ("fig10_ablation", bench_ablation.run),
+        ("tab3_4_5_split_paging", bench_split_paging.run),
+        ("fig11_12_tab6_7_learning_size", bench_learning_size.run),
+        ("serve_engine", bench_serve_engine.run),
+    ]
+    t_all = time.time()
+    failures = []
+    for name, fn in suites:
+        t0 = time.time()
+        print(f"### suite {name}")
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"### suite {name} done in {time.time()-t0:.1f}s")
+    print(f"### all suites done in {time.time()-t_all:.1f}s")
+    if failures:
+        raise SystemExit(f"failed suites: {failures}")
+
+
+if __name__ == "__main__":
+    main()

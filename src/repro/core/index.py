@@ -1,0 +1,174 @@
+"""LMSFC index construction (paper §5, Fig. 4).
+
+Pipeline: learn/choose θ → encode & sort by z-address → cost-based paging →
+page-level sort dimensions → PGM forward index over page z-mins.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import paging as paging_mod
+from . import pgm as pgm_mod
+from . import sortdim as sortdim_mod
+from .sfc import encode_np
+from .theta import Theta, default_K, zorder
+
+
+@dataclasses.dataclass
+class IndexConfig:
+    paging: str = "heuristic"      # 'fixed' | 'heuristic' | 'dp'
+    page_bytes: int = 8192          # B
+    fill_factor: float = 0.25       # f
+    alpha: float = 1.5              # heuristic MBR growth bound
+    k_maxsplit: int = 4             # recursive query splitting depth
+    pgm_eps: int = 128              # PGM error bound
+    use_sort_dim: bool = True
+    use_query_split: bool = True
+    skipping: str = "rqs"           # 'rqs' | 'fnz' | 'none'
+
+
+@dataclasses.dataclass
+class LMSFCIndex:
+    theta: Theta
+    cfg: IndexConfig
+    K: int
+    xs: np.ndarray          # (n, d) uint64, z-sorted then sort-dim-ordered per page
+    starts: np.ndarray      # (P+1,)
+    mbrs: np.ndarray        # (P, d, 2) int64
+    sort_dims: np.ndarray   # (P,)
+    page_zmin: np.ndarray   # (P,) uint64
+    page_zmax: np.ndarray   # (P,) uint64
+    pgm: pgm_mod.PGMIndex
+
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return len(self.xs)
+
+    @property
+    def d(self) -> int:
+        return self.xs.shape[1]
+
+    @property
+    def num_pages(self) -> int:
+        return len(self.starts) - 1
+
+    def index_size_bytes(self) -> int:
+        """Forward-index + page-metadata size (excludes the data itself),
+        mirroring the paper's Table 6 accounting."""
+        per_page = 8 + 8 + self.d * 2 * 8 + 4 + 8  # zmin zmax mbr sortdim start
+        return self.pgm.size_bytes() + self.num_pages * per_page
+
+    def page_of(self, z_u64) -> np.ndarray:
+        """Page index containing z (last page with zmin <= z; clipped to 0)."""
+        p = pgm_mod.lookup_le(self.pgm, self.page_zmin, z_u64)
+        return np.clip(p, 0, self.num_pages - 1)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def build(data: np.ndarray, theta: Theta = None, cfg: IndexConfig = None,
+              workload=None, K: int = None) -> "LMSFCIndex":
+        """data: (n, d) non-negative ints < 2^K, duplicate-free."""
+        cfg = cfg or IndexConfig()
+        data = np.asarray(data, dtype=np.uint64)
+        d = data.shape[1]
+        K = K or default_K(d)
+        theta = theta or zorder(d, K)
+
+        z = encode_np(data, theta)
+        order = np.argsort(z, kind="stable")
+        xs = data[order]
+        zs = z[order]
+
+        pg = paging_mod.make_paging(
+            xs.astype(np.int64), cfg.paging, K,
+            page_bytes=cfg.page_bytes, fill_factor=cfg.fill_factor,
+            alpha=cfg.alpha)
+        starts = pg.starts
+        page_zmin = zs[starts[:-1]]
+        page_zmax = zs[starts[1:] - 1]
+
+        if cfg.use_sort_dim and workload is not None:
+            qL, qU = workload
+            sort_dims = sortdim_mod.choose_sort_dims(pg.mbrs, qL, qU, 2**K)
+        else:
+            sort_dims = np.zeros(pg.num_pages, dtype=np.int32)
+        xs = sortdim_mod.apply_sort_dims(xs, starts, sort_dims)
+
+        pgm = pgm_mod.build_pgm(page_zmin, eps=cfg.pgm_eps)
+        return LMSFCIndex(theta=theta, cfg=cfg, K=K, xs=xs, starts=starts,
+                          mbrs=pg.mbrs, sort_dims=sort_dims,
+                          page_zmin=page_zmin, page_zmax=page_zmax, pgm=pgm)
+
+
+# ---------------------------------------------------------------------------
+# updates (paper §7.11): delta pages (LMSFCb) + tombstones + rebuild (LMSFCa)
+# ---------------------------------------------------------------------------
+
+
+def _ensure_update_state(index: "LMSFCIndex"):
+    if not hasattr(index, "_deltas"):
+        index._deltas = {}          # page -> list[np.ndarray row]
+        index._tombstones = set()   # tuples of coords
+        index._n_inserted = 0
+
+
+def insert(index: "LMSFCIndex", x) -> int:
+    """LMSFCb-style insertion: append to the target page's unsorted delta
+    array (located via the learned forward index); queries scan deltas.
+    Returns the page id."""
+    _ensure_update_state(index)
+    x = np.asarray(x, dtype=np.uint64)
+    z = encode_np(x[None], index.theta)[0]
+    p = int(index.page_of(z)[0])
+    index._deltas.setdefault(p, []).append(x)
+    index._n_inserted += 1
+    # keep page metadata usable: grow the MBR to cover the delta
+    index.mbrs[p, :, 0] = np.minimum(index.mbrs[p, :, 0], x.astype(np.int64))
+    index.mbrs[p, :, 1] = np.maximum(index.mbrs[p, :, 1], x.astype(np.int64))
+    return p
+
+
+def delete(index: "LMSFCIndex", x) -> None:
+    """Tombstone deletion (paper: 'mark a record as deleted')."""
+    _ensure_update_state(index)
+    index._tombstones.add(tuple(int(v) for v in np.asarray(x)))
+
+
+def delta_count(index: "LMSFCIndex", p: int, qL, qU) -> int:
+    """Extra matches from page p's delta array (minus tombstones)."""
+    if not hasattr(index, "_deltas") or p not in index._deltas:
+        return 0
+    rows = np.stack(index._deltas[p])
+    ok = np.all((rows >= qL) & (rows <= qU), axis=1)
+    cnt = int(ok.sum())
+    if index._tombstones:
+        for r in rows[ok]:
+            if tuple(int(v) for v in r) in index._tombstones:
+                cnt -= 1
+    return cnt
+
+
+def needs_rebuild(index: "LMSFCIndex", frac: float = 0.1) -> bool:
+    _ensure_update_state(index)
+    return index._n_inserted > frac * index.n
+
+
+def rebuild(index: "LMSFCIndex", workload=None) -> "LMSFCIndex":
+    """Merge deltas, drop tombstones, rebuild paging/sort-dims/PGM (the
+    paper's LMSFCa periodic maintenance; callers may re-run learn_sfc for a
+    fresh θ before calling this)."""
+    _ensure_update_state(index)
+    parts = [index.xs]
+    for rows in index._deltas.values():
+        parts.append(np.stack(rows))
+    data = np.concatenate(parts)
+    if index._tombstones:
+        keep = np.asarray([tuple(int(v) for v in r) not in index._tombstones
+                           for r in data])
+        data = data[keep]
+    data = np.unique(data, axis=0)
+    return LMSFCIndex.build(data, theta=index.theta, cfg=index.cfg,
+                            workload=workload, K=index.K)

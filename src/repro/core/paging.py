@@ -1,0 +1,276 @@
+"""Cost-based paging (paper §5.3).
+
+Given points sorted by z-address, partition them into pages of
+``smin..smax`` points (smin = f·B/4d, smax = B/4d) minimizing the density
+score  S(P) = vol(MBR(P)) / |P|  summed over pages.
+
+Three methods:
+  * ``fixed_paging``      — RSMI-style fixed-size packing (baseline).
+  * ``heuristic_paging``  — the paper's Algorithm 3 (α-bounded greedy),
+                            vectorized: one numpy call per *page*.
+  * ``dp_paging_np``      — the paper's Algorithm 2, exact O(n·(smax-smin))
+                            with sparse-table range-MBR queries.
+  * ``dp_paging_jax``     — same DP as a ``lax.scan`` for large n.
+
+Volumes are normalized to [0,1]^d (extent+1 unit cells / 2^K) so scores are
+well-conditioned for any K.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def page_capacity(d: int, page_bytes: int = 8192, fill_factor: float = 0.25,
+                  bytes_per_int: int = 4):
+    """(smin, smax) in points; the paper assumes 4-byte ints, B=8192, f=.25."""
+    smax = page_bytes // (bytes_per_int * d)
+    smin = max(1, int(fill_factor * smax))
+    return smin, smax
+
+
+# ---------------------------------------------------------------------------
+# MBR helpers
+# ---------------------------------------------------------------------------
+
+
+def compute_mbrs(xs: np.ndarray, starts: np.ndarray) -> np.ndarray:
+    """xs: (n, d) sorted; starts: (P+1,) boundaries -> (P, d, 2) [lo, hi]."""
+    P = len(starts) - 1
+    d = xs.shape[1]
+    mbrs = np.zeros((P, d, 2), dtype=np.int64)
+    for p in range(P):
+        seg = xs[starts[p]:starts[p + 1]]
+        mbrs[p, :, 0] = seg.min(axis=0)
+        mbrs[p, :, 1] = seg.max(axis=0)
+    return mbrs
+
+
+def _norm_vol(lo: np.ndarray, hi: np.ndarray, K: int) -> np.ndarray:
+    """normalized volume of [lo, hi] (inclusive), unit cell = 1/2^K."""
+    ext = (hi - lo + 1).astype(np.float64) / float(2**K)
+    return np.prod(ext, axis=-1)
+
+
+def total_score(xs: np.ndarray, starts: np.ndarray, K: int) -> float:
+    mbrs = compute_mbrs(xs, starts)
+    vols = _norm_vol(mbrs[:, :, 0], mbrs[:, :, 1], K)
+    sizes = np.diff(starts).astype(np.float64)
+    return float(np.sum(vols / sizes))
+
+
+# ---------------------------------------------------------------------------
+# fixed-size paging (RSMI / ZM-index baseline)
+# ---------------------------------------------------------------------------
+
+
+def fixed_paging(n: int, cap: int) -> np.ndarray:
+    starts = list(range(0, n, cap))
+    starts.append(n)
+    return np.asarray(starts, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# heuristic paging — paper Algorithm 3
+# ---------------------------------------------------------------------------
+
+
+def heuristic_paging(xs: np.ndarray, smin: int, smax: int, K: int,
+                     alpha: float = 1.5) -> np.ndarray:
+    """Greedy α-bounded packing; one vectorized pass per page."""
+    n = len(xs)
+    starts = [0]
+    s0 = 0
+    while s0 < n:
+        w = min(smax, n - s0)
+        seg = xs[s0:s0 + w].astype(np.int64)
+        run_lo = np.minimum.accumulate(seg, axis=0)
+        run_hi = np.maximum.accumulate(seg, axis=0)
+        vols = _norm_vol(run_lo, run_hi, K)  # vols[t] = vol of first t+1 pts
+        end = w
+        if w > smin:
+            grow = vols[smin:w] >= alpha * vols[smin - 1:w - 1]
+            idx = np.nonzero(grow)[0]
+            if len(idx):
+                end = smin + int(idx[0])
+        s0 += max(end, 1)
+        starts.append(s0)
+    return np.asarray(starts, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# sparse table for range-MBR queries (shared by both DP variants)
+# ---------------------------------------------------------------------------
+
+
+def _build_sparse_table(xs: np.ndarray, kmax: int):
+    """tables[k]: (n - 2^k + 1, d, 2) min/max over xs[i : i + 2^k]."""
+    cur_lo = xs.astype(np.int64)
+    cur_hi = xs.astype(np.int64)
+    tables = {0: (cur_lo, cur_hi)}
+    for k in range(1, kmax + 1):
+        h = 1 << (k - 1)
+        cur_lo = np.minimum(cur_lo[:-h], cur_lo[h:])
+        cur_hi = np.maximum(cur_hi[:-h], cur_hi[h:])
+        tables[k] = (cur_lo, cur_hi)
+    return tables
+
+
+def _range_vols(tables, l: np.ndarray, r: np.ndarray, K: int) -> np.ndarray:
+    """vol of MBR(xs[l:r]) for vectors l, r (r > l)."""
+    L = r - l
+    ks = np.floor(np.log2(L)).astype(np.int64)
+    vols = np.empty(len(l), dtype=np.float64)
+    for k in np.unique(ks):
+        m = ks == k
+        h = 1 << int(k)
+        tlo, thi = tables[int(k)]
+        lo = np.minimum(tlo[l[m]], tlo[r[m] - h])
+        hi = np.maximum(thi[l[m]], thi[r[m] - h])
+        vols[m] = _norm_vol(lo, hi, K)
+    return vols
+
+
+# ---------------------------------------------------------------------------
+# DP paging — paper Algorithm 2 (exact)
+# ---------------------------------------------------------------------------
+
+
+def dp_paging_np(xs: np.ndarray, smin: int, smax: int, K: int) -> np.ndarray:
+    n = len(xs)
+    if n <= smax:
+        return np.asarray([0, n], dtype=np.int64)
+    kmax = int(np.floor(np.log2(smax)))
+    tables = _build_sparse_table(xs, kmax)
+    OPT = np.full(n + 1, np.inf)
+    OPT[0] = 0.0
+    choice = np.zeros(n + 1, dtype=np.int64)
+    # prefix pages smaller than smin (at most one undersized page allowed)
+    for i in range(1, min(smin, n + 1)):
+        seg = xs[:i].astype(np.int64)
+        OPT[i] = _norm_vol(seg.min(0), seg.max(0), K) / i
+        choice[i] = i
+    s_full = np.arange(smin, smax + 1)
+    for i in range(smin, n + 1):
+        s = s_full[s_full <= i]
+        vols = _range_vols(tables, i - s, np.full(len(s), i), K)
+        cand = OPT[i - s] + vols / s
+        k = int(np.argmin(cand))
+        OPT[i] = cand[k]
+        choice[i] = s[k]
+    # backtrack
+    bounds = [n]
+    i = n
+    while i > 0:
+        i -= int(choice[i])
+        bounds.append(i)
+    return np.asarray(bounds[::-1], dtype=np.int64)
+
+
+def dp_paging_jax(xs: np.ndarray, smin: int, smax: int, K: int) -> np.ndarray:
+    """Same recurrence as dp_paging_np, run as a jitted lax.scan (for large n).
+    Returns identical boundaries (exact DP, not an approximation)."""
+    n = len(xs)
+    if n <= smax:
+        return np.asarray([0, n], dtype=np.int64)
+    kmax = int(np.floor(np.log2(smax)))
+    tables_np = _build_sparse_table(xs, kmax)
+    # per window length s: which level k and gathered table
+    s_vec = np.arange(smin, smax + 1)
+    k_of_s = np.floor(np.log2(s_vec)).astype(np.int32)
+    # pad all tables to length n so indexing is uniform
+    tlo = np.full((kmax + 1, n, xs.shape[1]), np.iinfo(np.int64).max // 4, dtype=np.int64)
+    thi = np.full((kmax + 1, n, xs.shape[1]), np.iinfo(np.int64).min // 4, dtype=np.int64)
+    for k, (lo, hi) in tables_np.items():
+        tlo[k, :len(lo)] = lo
+        thi[k, :len(hi)] = hi
+    scale = 1.0 / float(2**K)
+
+    tlo_j = jnp.asarray(tlo, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    thi_j = jnp.asarray(thi, tlo_j.dtype)
+    s_j = jnp.asarray(s_vec, jnp.int32)
+    k_j = jnp.asarray(k_of_s, jnp.int32)
+    h_j = (1 << k_j).astype(jnp.int32)
+    BIG = jnp.asarray(1e30, tlo_j.dtype)
+
+    def vol_of(l, r):  # vectorized over the s axis
+        lo = jnp.minimum(tlo_j[k_j, l], tlo_j[k_j, r - h_j])
+        hi = jnp.maximum(thi_j[k_j, l], thi_j[k_j, r - h_j])
+        return jnp.prod((hi - lo + 1) * scale, axis=-1)
+
+    # OPT carried as a rolling buffer of the last smax+1 values
+    buf0 = jnp.full(smax + 1, BIG)
+    buf0 = buf0.at[0].set(0.0)  # OPT[i - smax - 1 + t]... maintained below
+
+    # simpler: carry full OPT array (n+1,) — memory n*8B is fine (<100MB for 10M)
+    OPT0 = jnp.full(n + 1, BIG).at[0].set(0.0)
+    prefix_i = np.arange(1, min(smin, n + 1))
+    OPT_np = np.full(n + 1, np.inf)
+    OPT_np[0] = 0.0
+    for i in prefix_i:  # tiny
+        seg = xs[:i].astype(np.int64)
+        OPT_np[i] = _norm_vol(seg.min(0), seg.max(0), K) / i
+    OPT0 = jnp.asarray(np.where(np.isfinite(OPT_np), OPT_np, 1e30), tlo_j.dtype)
+
+    def step(OPT, i):
+        s_ok = s_j <= i
+        l = jnp.maximum(i - s_j, 0)
+        vols = vol_of(l, jnp.maximum(i, h_j))  # r>=h guaranteed for valid s
+        cand = jnp.where(s_ok, OPT[l] + vols / s_j, BIG)
+        kbest = jnp.argmin(cand)
+        OPT = OPT.at[i].min(cand[kbest])
+        return OPT, s_j[kbest]
+
+    idxs = jnp.arange(smin, n + 1, dtype=jnp.int32)
+    OPT, choices = jax.lax.scan(step, OPT0, idxs)
+    choices = np.asarray(choices)
+    choice = np.zeros(n + 1, dtype=np.int64)
+    choice[1:smin] = np.arange(1, smin) if smin > 1 else 0
+    choice[smin:] = choices
+    bounds = [n]
+    i = n
+    while i > 0:
+        i -= int(choice[i])
+        bounds.append(i)
+    return np.asarray(bounds[::-1], dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# container
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Paging:
+    starts: np.ndarray      # (P+1,)
+    mbrs: np.ndarray        # (P, d, 2)
+    method: str
+
+    @property
+    def num_pages(self) -> int:
+        return len(self.starts) - 1
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return np.diff(self.starts)
+
+
+def make_paging(xs_sorted: np.ndarray, method: str, K: int,
+                page_bytes: int = 8192, fill_factor: float = 0.25,
+                alpha: float = 1.5) -> Paging:
+    d = xs_sorted.shape[1]
+    smin, smax = page_capacity(d, page_bytes, fill_factor)
+    n = len(xs_sorted)
+    if method == "fixed":
+        starts = fixed_paging(n, smax)
+    elif method == "heuristic":
+        starts = heuristic_paging(xs_sorted, smin, smax, K, alpha)
+    elif method == "dp":
+        starts = (dp_paging_np if n <= 200_000 else dp_paging_jax)(
+            xs_sorted, smin, smax, K)
+    else:
+        raise ValueError(method)
+    return Paging(starts=starts, mbrs=compute_mbrs(xs_sorted, starts), method=method)

@@ -1,0 +1,192 @@
+"""TPU-vectorized distributed window-query serving (DESIGN.md §2).
+
+The paper's per-query page walk is re-expressed as a static-shape pipeline:
+
+  split      — recursive query splitting (§6.1), vectorized over (Q, 2^k)
+  prune      — page-level candidate mask: z-range overlap with any sub-query
+               AND MBR intersection (metadata-only compares; this is where
+               RQS' skipping pays off, mirroring the CPU engine)
+  contain    — pages whose MBR ⊆ query contribute size() with *no* gather
+               (the paper's containment shortcut)
+  compact    — top-C candidate page ids per query (static bound)
+  gather     — only candidate pages' points (the expensive HBM term)
+  filter     — points-in-rectangle count (Pallas window_filter on TPU)
+
+Pages are range-sharded over the flattened device mesh; queries are
+replicated; per-device partial counts are psum-reduced.  Exactness: the
+sub-rectangles partition the query, so filtering with the *full* query
+rectangle counts every point exactly once, and cross-device page shards are
+disjoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..kernels.window_filter.ops import window_filter
+from .index import LMSFCIndex
+from .split import recursive_split_jax, zranges_jax
+from .theta import Theta
+from .zorder64 import u64_to_z64, z64_le
+
+# ---------------------------------------------------------------------------
+# serving arrays
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServingArrays:
+    """Page-major device arrays.  All leaves shard on axis 0 (pages)."""
+    points: Any      # (P, d, cap) int32 — transposed for the filter kernel
+    page_zmin: Any   # (P, 2) int32 Z64
+    page_zmax: Any   # (P, 2) int32
+    page_mbr: Any    # (P, d, 2) int32
+    page_size: Any   # (P,) int32
+
+
+jax.tree_util.register_dataclass(
+    ServingArrays,
+    data_fields=["points", "page_zmin", "page_zmax", "page_mbr", "page_size"],
+    meta_fields=[])
+
+
+def build_serving_arrays(index: LMSFCIndex, pad_pages_to: int = 1,
+                         cap: int = None) -> ServingArrays:
+    """Materialize padded page-major arrays from a built index."""
+    Pn = index.num_pages
+    d = index.d
+    cap = cap or int(np.diff(index.starts).max())
+    P_pad = -(-Pn // pad_pages_to) * pad_pages_to
+    pts = np.zeros((P_pad, d, cap), dtype=np.uint32)
+    size = np.zeros(P_pad, dtype=np.int32)
+    for p in range(Pn):
+        s, e = index.starts[p], index.starts[p + 1]
+        seg = index.xs[s:e].astype(np.uint32)
+        pts[p, :, :e - s] = seg.T
+        size[p] = e - s
+    mbr = np.zeros((P_pad, d, 2), dtype=np.uint32)
+    mbr[:Pn] = index.mbrs.astype(np.uint32)
+    # padded pages: impossible MBR (lo > hi) so they never match
+    mbr[Pn:, :, 0] = np.uint32(0xFFFFFFFF)
+    zmin = np.full((P_pad, 2), np.int32(-1))   # 0xFFFF.. = +inf unsigned
+    zmax = np.zeros((P_pad, 2), dtype=np.int32)
+    zmin[:Pn] = u64_to_z64(index.page_zmin)
+    zmax[:Pn] = u64_to_z64(index.page_zmax)
+    return ServingArrays(
+        points=jnp.asarray(pts.view(np.int32)),
+        page_zmin=jnp.asarray(zmin),
+        page_zmax=jnp.asarray(zmax),
+        page_mbr=jnp.asarray(mbr.view(np.int32)),
+        page_size=jnp.asarray(size),
+    )
+
+
+# ---------------------------------------------------------------------------
+# single-shard batched query engine
+# ---------------------------------------------------------------------------
+
+_SIGN = np.int32(-(2**31))
+
+
+def _u32_le(a, b):
+    return (a ^ _SIGN) <= (b ^ _SIGN)
+
+
+def make_query_fn(theta: Theta, *, k_maxsplit: int = 4, max_cand: int = 64,
+                  q_chunk: int = 16, backend: str = "xla"):
+    """Returns query_batch(arrays, queries (Q, d, 2) int32) -> (counts (Q,),
+    overflowed (Q,) bool).  Static shapes throughout; Q % q_chunk == 0."""
+
+    def _chunk(arrays: ServingArrays, queries):
+        Qc = queries.shape[0]
+        rects, valid = recursive_split_jax(
+            queries.astype(jnp.uint32), theta, k_maxsplit)
+        zlo, zhi = zranges_jax(rects, theta)          # (Qc, S, 2)
+        # ---- prune: page z-range overlaps any live sub-query ------------
+        pz_min = arrays.page_zmin                     # (P, 2)
+        pz_max = arrays.page_zmax
+        ov = (z64_le(zlo[:, :, None, :], pz_max[None, None]) &
+              z64_le(pz_min[None, None], zhi[:, :, None, :]))  # (Qc, S, P)
+        ov = jnp.any(ov & valid[:, :, None], axis=1)  # (Qc, P)
+        qlo = queries[:, None, :, 0]                  # (Qc, 1, d)
+        qhi = queries[:, None, :, 1]
+        mlo = arrays.page_mbr[None, :, :, 0]          # (1, P, d)
+        mhi = arrays.page_mbr[None, :, :, 1]
+        intersect = jnp.all(_u32_le(mlo, qhi) & _u32_le(qlo, mhi), -1)
+        contained = jnp.all(_u32_le(qlo, mlo) & _u32_le(mhi, qhi), -1)
+        live = ov & intersect                         # (Qc, P)
+        full = live & contained
+        partial = live & ~contained
+        # ---- containment shortcut ---------------------------------------
+        base = jnp.sum(jnp.where(full, arrays.page_size[None, :], 0), axis=1)
+        # ---- compact: top-C partial candidates ---------------------------
+        Pn = partial.shape[1]
+        pos = jnp.cumsum(partial, axis=1) - 1         # (Qc, P)
+        n_cand = pos[:, -1] + 1
+        overflow = n_cand > max_cand
+        cand = jnp.zeros((Qc, max_cand), jnp.int32)
+        qidx = jnp.broadcast_to(jnp.arange(Qc)[:, None], partial.shape)
+        pidx = jnp.broadcast_to(jnp.arange(Pn)[None, :], partial.shape)
+        okpos = partial & (pos < max_cand)
+        cand = cand.at[jnp.where(okpos, qidx, Qc), jnp.where(okpos, pos, 0)
+                       ].set(pidx, mode="drop")
+        cand_valid = jnp.arange(max_cand)[None, :] < jnp.minimum(n_cand, max_cand)[:, None]
+        # ---- gather + filter ---------------------------------------------
+        pts = arrays.points[cand]                     # (Qc, C, d, cap)
+        size = jnp.where(cand_valid, arrays.page_size[cand], 0)
+        d = pts.shape[2]
+        cap = pts.shape[3]
+        rect = jnp.broadcast_to(queries[:, None], (Qc, max_cand, d, 2))
+        cnt = window_filter(pts.reshape(-1, d, cap), rect.reshape(-1, d, 2),
+                            size.reshape(-1), backend=backend)
+        return base + jnp.sum(cnt.reshape(Qc, max_cand), axis=1), overflow
+
+    def query_batch(arrays: ServingArrays, queries):
+        Q = queries.shape[0]
+        assert Q % q_chunk == 0
+        qs = queries.reshape(Q // q_chunk, q_chunk, *queries.shape[1:])
+        counts, over = jax.lax.map(functools.partial(_chunk, arrays), qs)
+        return counts.reshape(Q), over.reshape(Q)
+
+    return query_batch
+
+
+# ---------------------------------------------------------------------------
+# distributed engine (pages sharded over the whole mesh)
+# ---------------------------------------------------------------------------
+
+
+def make_distributed_query_fn(theta: Theta, mesh, *, k_maxsplit: int = 4,
+                              max_cand: int = 64, q_chunk: int = 16,
+                              backend: str = "xla"):
+    """shard_map over all mesh axes: every device prunes/scans its own page
+    shard for the full (replicated) query batch; counts are psum-reduced."""
+    axes = tuple(mesh.axis_names)
+    local = make_query_fn(theta, k_maxsplit=k_maxsplit, max_cand=max_cand,
+                          q_chunk=q_chunk, backend=backend)
+
+    def _local(arrays, queries):
+        counts, over = local(arrays, queries)
+        counts = jax.lax.psum(counts, axes)
+        over = jax.lax.psum(over.astype(jnp.int32), axes)
+        return counts, over
+
+    shard_specs = ServingArrays(
+        points=P(axes), page_zmin=P(axes), page_zmax=P(axes),
+        page_mbr=P(axes), page_size=P(axes))
+    f = jax.shard_map(_local, mesh=mesh,
+                      in_specs=(shard_specs, P()),
+                      out_specs=(P(), P()))
+    return f, shard_specs
+
+
+def shard_serving_arrays(arrays: ServingArrays, mesh) -> ServingArrays:
+    axes = tuple(mesh.axis_names)
+    put = lambda x: jax.device_put(x, NamedSharding(mesh, P(axes)))
+    return jax.tree.map(put, arrays)

@@ -1,0 +1,146 @@
+"""SFC mapping f(x; θ) — numpy uint64 oracle and JAX dual-uint32 versions.
+
+Encode = "scramble the bits of x according to θ" (paper §4.3).  The numpy
+path is the correctness oracle (and serves index *construction*); the JAX
+path is the TPU serving path (Z64 = (hi, lo) int32 pairs, see zorder64.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .theta import Theta
+
+# ---------------------------------------------------------------------------
+# numpy oracle (uint64)
+# ---------------------------------------------------------------------------
+
+
+def encode_np_ref(x: np.ndarray, theta: Theta) -> np.ndarray:
+    """Reference bit-loop encode (oracle for the table-driven fast path)."""
+    x = np.asarray(x, dtype=np.uint64)
+    dim = theta.dim_of_pos
+    bit = theta.bit_of_pos
+    z = np.zeros(x.shape[:-1], dtype=np.uint64)
+    for l in range(theta.d * theta.K):
+        b = (x[..., dim[l]] >> np.uint64(bit[l])) & np.uint64(1)
+        z |= b << np.uint64(l)
+    return z
+
+
+_TABLE_CACHE = {}
+
+
+def _spread_tables(theta: Theta):
+    """Per-dim 16-bit-chunk lookup tables: table[i][c][v] = the scattered
+    z-bits of chunk c of dimension i holding value v.  Encode then becomes
+    a handful of numpy gathers (the 64-step bit loop is ~100x slower for
+    the per-query single-point encodes in splitting/skipping)."""
+    key = (theta.d, theta.K, theta.seq)
+    t = _TABLE_CACHE.get(key)
+    if t is not None:
+        return t
+    pos = theta.pos_of_bit  # (d, K)
+    n_chunks = -(-theta.K // 16)
+    tables = np.zeros((theta.d, n_chunks, 65536), dtype=np.uint64)
+    v = np.arange(65536, dtype=np.uint64)
+    for i in range(theta.d):
+        for c in range(n_chunks):
+            acc = np.zeros(65536, dtype=np.uint64)
+            for j in range(16 * c, min(theta.K, 16 * (c + 1))):
+                b = (v >> np.uint64(j - 16 * c)) & np.uint64(1)
+                acc |= b << np.uint64(pos[i, j])
+            tables[i, c] = acc
+    _TABLE_CACHE[key] = tables
+    return tables
+
+
+def encode_np(x: np.ndarray, theta: Theta) -> np.ndarray:
+    """x: (..., d) unsigned ints (values < 2^K) -> (...,) uint64 z-address."""
+    x = np.asarray(x, dtype=np.uint64)
+    tables = _spread_tables(theta)
+    z = np.zeros(x.shape[:-1], dtype=np.uint64)
+    n_chunks = tables.shape[1]
+    for i in range(theta.d):
+        xi = x[..., i]
+        for c in range(n_chunks):
+            chunk = (xi >> np.uint64(16 * c)) & np.uint64(0xFFFF)
+            z |= tables[i, c][chunk.astype(np.int64)]
+    return z
+
+
+def decode_np(z: np.ndarray, theta: Theta) -> np.ndarray:
+    """uint64 z-address -> (..., d) uint64 coordinates (inverse of encode)."""
+    z = np.asarray(z, dtype=np.uint64)
+    dim = theta.dim_of_pos
+    bit = theta.bit_of_pos
+    x = np.zeros(z.shape + (theta.d,), dtype=np.uint64)
+    for l in range(theta.d * theta.K):
+        b = (z >> np.uint64(l)) & np.uint64(1)
+        x[..., dim[l]] |= b << np.uint64(bit[l])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# JAX path (int32 coords in, Z64 out)
+# ---------------------------------------------------------------------------
+
+
+def encode_jax(x, theta: Theta):
+    """x: (..., d) int32 (unsigned semantics, values < 2^K) -> (..., 2) Z64.
+
+    Fully unrolled <=64-step shift/and/or chain; θ is static so XLA folds the
+    constants.  This is also the reference body mirrored by the Pallas kernel
+    in kernels/sfc_encode.
+    """
+    dim = theta.dim_of_pos
+    bit = theta.bit_of_pos
+    lo = jnp.zeros(x.shape[:-1], jnp.int32)
+    hi = jnp.zeros(x.shape[:-1], jnp.int32)
+    for l in range(theta.d * theta.K):
+        b = (x[..., dim[l]] >> np.int32(bit[l])) & 1
+        if l < 32:
+            lo = lo | (b << np.int32(l))
+        else:
+            hi = hi | (b << np.int32(l - 32))
+    return jnp.stack([hi, lo], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# properties (used by tests / assertions)
+# ---------------------------------------------------------------------------
+
+
+_PY_TABLE_CACHE = {}
+
+
+def _spread_tables_py(theta: Theta):
+    """Nested python-int lists of the spread tables (list indexing beats
+    numpy scalar indexing ~5x on the per-corner encodes in splitting)."""
+    key = (theta.d, theta.K, theta.seq)
+    t = _PY_TABLE_CACHE.get(key)
+    if t is None:
+        tables = _spread_tables(theta)
+        t = [[tables[i, c].tolist() for c in range(tables.shape[1])]
+             for i in range(theta.d)]
+        _PY_TABLE_CACHE[key] = t
+    return t
+
+
+def encode_scalar(coords, theta: Theta) -> int:
+    """Single-point encode on python ints via the spread tables (the
+    query-splitting hot path)."""
+    tables = _spread_tables_py(theta)
+    z = 0
+    for i in range(theta.d):
+        v = int(coords[i])
+        for c, tc in enumerate(tables[i]):
+            z |= tc[(v >> (16 * c)) & 0xFFFF]
+    return z
+
+
+def is_monotonic_pair(theta: Theta, a: np.ndarray, b: np.ndarray) -> bool:
+    """Check Thm 1's premise on one pair: a<=b (componentwise) => f(a)<=f(b)."""
+    if not np.all(a <= b):
+        return True
+    return encode_np(a[None], theta)[0] <= encode_np(b[None], theta)[0]

@@ -1,0 +1,99 @@
+"""SMBO learning of the SFC parameter θ (paper §5.2, Algorithm 1).
+
+Surrogate = random forest (per the paper), acquisition = Expected
+Improvement, candidates = local transpositions of the incumbent + uniform
+random θ.  The objective is the deterministic scan-cost proxy of cost.py
+evaluated on (sampled) data + (sampled) workload — the paper's BatchEval
+with QueryTime replaced per DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .cost import evaluate_theta
+from .index import IndexConfig
+from .surrogate import RandomForest
+from .theta import Theta, major_order, neighbors, random_theta, zorder
+
+_SQRT2 = math.sqrt(2.0)
+
+
+def _norm_cdf(z):
+    return 0.5 * (1.0 + np.vectorize(math.erf)(z / _SQRT2))
+
+
+def _norm_pdf(z):
+    return np.exp(-0.5 * z * z) / math.sqrt(2 * math.pi)
+
+
+def expected_improvement(mu, sigma, best):
+    """EI for minimization."""
+    sigma = np.maximum(sigma, 1e-9)
+    z = (best - mu) / sigma
+    return (best - mu) * _norm_cdf(z) + sigma * _norm_pdf(z)
+
+
+@dataclasses.dataclass
+class SMBOResult:
+    theta_best: Theta
+    y_best: float
+    history: list          # (iteration, y_best)
+    evaluated: list        # (theta, y)
+
+
+def learn_sfc(data: np.ndarray, Ls: np.ndarray, Us: np.ndarray, *,
+              K: int, cfg: IndexConfig = None, max_iters: int = 10,
+              n_init: int = 8, pool_size: int = 48, evals_per_iter: int = 4,
+              seed: int = 0, verbose: bool = False) -> SMBOResult:
+    """Algorithm 1.  data/workload should already be sampled by the caller
+    (the paper defaults to 5% of the data)."""
+    rng = np.random.default_rng(seed)
+    d = data.shape[1]
+    cfg = cfg or IndexConfig(paging="heuristic")
+
+    # --- line 1: initial design + surrogate ------------------------------
+    init = [zorder(d, K), major_order(d, K), major_order(d, K, list(reversed(range(d))))]
+    seen = {t.seq for t in init}
+    while len(init) < n_init:
+        t = random_theta(rng, d, K)
+        if t.seq not in seen:
+            seen.add(t.seq)
+            init.append(t)
+
+    evaluated = [(t, evaluate_theta(t, data, Ls, Us, cfg, K)) for t in init]
+    model = RandomForest(seed=seed)
+    ybest_idx = int(np.argmin([y for _, y in evaluated]))
+    theta_best, y_best = evaluated[ybest_idx]
+    history = [(0, y_best)]
+
+    for it in range(1, max_iters + 1):
+        X = np.stack([t.features() for t, _ in evaluated])
+        y = np.asarray([v for _, v in evaluated])
+        model.fit(X, y)
+
+        # --- line 3: SelectCands via EI over a perturbation pool ---------
+        pool = neighbors(theta_best, rng, n=pool_size // 2, max_swaps=3)
+        pool += [random_theta(rng, d, K) for _ in range(pool_size - len(pool))]
+        pool = [t for t in pool if t.seq not in seen] or pool
+        Xp = np.stack([t.features() for t in pool])
+        mu, sigma = model.predict(Xp)
+        ei = expected_improvement(mu, sigma, y_best)
+        top = np.argsort(-ei)[:evals_per_iter]
+
+        # --- line 4: BatchEval -------------------------------------------
+        for j in top:
+            t = pool[int(j)]
+            seen.add(t.seq)
+            yv = evaluate_theta(t, data, Ls, Us, cfg, K)
+            evaluated.append((t, yv))
+            if yv < y_best:
+                y_best, theta_best = yv, t
+        history.append((it, y_best))
+        if verbose:
+            print(f"[smbo] iter {it}: best cost {y_best:.3f}")
+
+    return SMBOResult(theta_best=theta_best, y_best=y_best,
+                      history=history, evaluated=evaluated)

@@ -1,0 +1,61 @@
+"""Page-level sort dimensions (paper §5.4).
+
+Unlike Flood's single global sort dimension, every page may pick its own:
+for each page, over the training queries intersecting its MBR, estimate the
+scan cost of sorting by each dimension δ — the expected fraction of the
+page's δ-extent that the query's δ-range covers (that fraction of the page
+must be scanned after the binary-search refinement) — and keep the argmin.
+Pages with no intersecting query use the global default (the dimension with
+the smallest average relative query width, Flood's choice).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def mbr_intersects(mbrs: np.ndarray, qL: np.ndarray, qU: np.ndarray) -> np.ndarray:
+    """mbrs: (P, d, 2); qL/qU: (d,) -> (P,) bool."""
+    return np.all((mbrs[:, :, 0] <= qU) & (mbrs[:, :, 1] >= qL), axis=1)
+
+
+def default_sort_dim(queries_L: np.ndarray, queries_U: np.ndarray,
+                     domain: int) -> int:
+    """Globally most selective dimension (smallest mean relative width)."""
+    widths = (queries_U - queries_L + 1).astype(np.float64) / float(domain)
+    return int(np.argmin(widths.mean(axis=0)))
+
+
+def choose_sort_dims(mbrs: np.ndarray, queries_L: np.ndarray,
+                     queries_U: np.ndarray, domain: int) -> np.ndarray:
+    """(P,) per-page sort dimension."""
+    P, d, _ = mbrs.shape
+    dflt = default_sort_dim(queries_L, queries_U, domain)
+    out = np.full(P, dflt, dtype=np.int32)
+    ext = (mbrs[:, :, 1] - mbrs[:, :, 0] + 1).astype(np.float64)  # (P, d)
+    cost = np.zeros((P, d), dtype=np.float64)
+    hits = np.zeros(P, dtype=np.int64)
+    for qL, qU in zip(queries_L, queries_U):
+        m = mbr_intersects(mbrs, qL, qU)
+        if not m.any():
+            continue
+        lo = np.maximum(mbrs[m, :, 0], qL)
+        hi = np.minimum(mbrs[m, :, 1], qU)
+        frac = (hi - lo + 1).astype(np.float64) / ext[m]  # scanned fraction per dim
+        cost[m] += frac
+        hits[m] += 1
+    sel = hits > 0
+    out[sel] = np.argmin(cost[sel], axis=1)
+    return out
+
+
+def apply_sort_dims(xs: np.ndarray, starts: np.ndarray,
+                    sort_dims: np.ndarray) -> np.ndarray:
+    """Reorder points inside each page by its sort dimension (stable, so
+    z-order is preserved as tie-break).  Returns the reordered copy."""
+    out = xs.copy()
+    for p in range(len(starts) - 1):
+        s, e = starts[p], starts[p + 1]
+        seg = xs[s:e]
+        order = np.argsort(seg[:, sort_dims[p]], kind="stable")
+        out[s:e] = seg[order]
+    return out

@@ -1,0 +1,156 @@
+"""Recursive query splitting (paper §6, Lemma 2).
+
+Optimal 1-split: for each dimension δ with qL^(δ) < qU^(δ), the best cut is
+v* = (qU^(δ) >> l) << l with l = MSB of qL^(δ) XOR qU^(δ); the split removes
+the z-gap (f(L) − f(U)) from the scanned range, where
+U = (qU with δ ↦ v*−1) and L = (qL with δ ↦ v*).  Choose the δ with the
+largest positive gap; recurse up to k_maxsplit times.
+
+numpy path: per-query recursion (faithful to Algorithm 4, used by the CPU
+engine + SMBO cost evaluation).  JAX path: fully vectorized over a
+(Q, 2^k) static sub-query tensor with validity masks (TPU serving engine).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .sfc import encode_jax, encode_np, encode_scalar
+from .theta import Theta
+from .zorder64 import z64_lt, z64_sub
+
+# ---------------------------------------------------------------------------
+# numpy (faithful Algorithm 4)
+# ---------------------------------------------------------------------------
+
+
+def _msb(v: int) -> int:
+    return int(v).bit_length() - 1
+
+
+def optimal_1split(qL, qU, theta: Theta):
+    """Return (delta, v, gap) for the best single split, or None if no
+    positive-gap split exists.  Scalar-int hot path (called ~2^k times per
+    query by the recursion)."""
+    d = theta.d
+    qLl = [int(v) for v in qL]
+    qUl = [int(v) for v in qU]
+    best = None
+    for delta in range(d):
+        lo, up = qLl[delta], qUl[delta]
+        if lo >= up:
+            continue
+        l = (lo ^ up).bit_length() - 1
+        v = (up >> l) << l
+        U = list(qUl)
+        U[delta] = v - 1
+        L = list(qLl)
+        L[delta] = v
+        fU = encode_scalar(U, theta)
+        fL = encode_scalar(L, theta)
+        if fL > fU:
+            gap = fL - fU
+            if best is None or gap > best[2]:
+                best = (delta, v, gap)
+    return best
+
+
+def _rsplit(qL: list, qU: list, theta: Theta, k: int, out: list):
+    best = optimal_1split(qL, qU, theta) if k > 0 else None
+    if best is None:
+        out.append((np.asarray(qL, np.uint64), np.asarray(qU, np.uint64)))
+        return
+    delta, v, _ = best
+    U = list(qU)
+    U[delta] = v - 1
+    L = list(qL)
+    L[delta] = v
+    _rsplit(qL, U, theta, k - 1, out)
+    _rsplit(L, qU, theta, k - 1, out)
+
+
+def recursive_split(qL, qU, theta: Theta, k_maxsplit: int = 4):
+    """List of (qL, qU) uint64 sub-rectangles (Algorithm 4)."""
+    out = []
+    _rsplit([int(v) for v in qL], [int(v) for v in qU], theta, k_maxsplit, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# JAX (vectorized, static shapes)
+# ---------------------------------------------------------------------------
+
+
+def _msb_jax(v):
+    """floor(log2(v)) for uint32 v>0 via bit smear + popcount."""
+    v = v | (v >> 1)
+    v = v | (v >> 2)
+    v = v | (v >> 4)
+    v = v | (v >> 8)
+    v = v | (v >> 16)
+    return lax.population_count(v).astype(jnp.uint32) - jnp.uint32(1)
+
+
+def _split_once(rects, valid, theta: Theta):
+    """rects: (Q, S, d, 2) uint32 [lo, up]; valid: (Q, S) bool.
+    Returns (rects', valid') with S doubled."""
+    d = theta.d
+    qL = rects[..., 0]  # (Q, S, d)
+    qU = rects[..., 1]
+    splittable = qL < qU
+    x = qL ^ qU
+    l = _msb_jax(jnp.maximum(x, jnp.uint32(1)))
+    v = jnp.right_shift(qU, l) << l  # candidate cut per dim
+
+    # corner points per candidate dim delta: (Q, S, d_delta, d_coord)
+    eye = jnp.eye(d, dtype=bool)
+    U_all = jnp.where(eye, (v - jnp.uint32(1))[..., :, None], qU[..., None, :])
+    L_all = jnp.where(eye, v[..., :, None], qL[..., None, :])
+    fU = encode_jax(U_all.astype(jnp.int32), theta)  # (Q, S, d, 2)
+    fL = encode_jax(L_all.astype(jnp.int32), theta)
+    pos = z64_lt(fU, fL) & splittable  # (Q, S, d)
+    gap = z64_sub(fL, fU)
+    ghi = jnp.where(pos, gap[..., 0].astype(jnp.uint32), jnp.uint32(0))
+    glo = jnp.where(pos, gap[..., 1].astype(jnp.uint32), jnp.uint32(0))
+
+    # Exact lexicographic argmax over dims of the 64-bit gap without u64:
+    # (1) max of hi word, (2) max of lo word among hi-ties, (3) first match.
+    mhi = jnp.max(ghi, axis=-1, keepdims=True)
+    tie1 = pos & (ghi == mhi)
+    mlo = jnp.max(jnp.where(tie1, glo, jnp.uint32(0)), axis=-1, keepdims=True)
+    tie2 = tie1 & (glo == mlo)
+    delta = jnp.argmax(tie2, axis=-1)  # (Q, S)
+    any_split = jnp.any(pos, axis=-1) & valid
+
+    sel = jnp.arange(d) == delta[..., None]  # (Q, S, d)
+    v_sel = jnp.take_along_axis(v, delta[..., None], axis=-1)  # (Q, S, 1)
+
+    do = any_split[..., None]
+    child0_U = jnp.where(sel & do, v_sel - jnp.uint32(1), qU)
+    child1_L = jnp.where(sel & do, v_sel, qL)
+
+    c0 = jnp.stack([qL, child0_U], axis=-1)  # (Q, S, d, 2)
+    c1 = jnp.stack([child1_L, qU], axis=-1)
+    rects2 = jnp.stack([c0, c1], axis=2)  # (Q, S, 2, d, 2)
+    valid2 = jnp.stack([valid, any_split], axis=2)  # (Q, S, 2)
+
+    Q, S = valid.shape
+    return (rects2.reshape(Q, 2 * S, d, 2), valid2.reshape(Q, 2 * S))
+
+
+def recursive_split_jax(queries, theta: Theta, k_maxsplit: int = 4):
+    """queries: (Q, d, 2) uint32 -> (rects (Q, 2^k, d, 2) uint32,
+    valid (Q, 2^k) bool)."""
+    rects = queries[:, None].astype(jnp.uint32)  # (Q, 1, d, 2)
+    valid = jnp.ones(rects.shape[:2], bool)
+    for _ in range(k_maxsplit):
+        rects, valid = _split_once(rects, valid, theta)
+    return rects, valid
+
+
+def zranges_jax(rects, theta: Theta):
+    """Z64 ranges for each sub-query: (zlo, zhi), each (..., 2) int32."""
+    zlo = encode_jax(rects[..., 0].astype(jnp.int32), theta)
+    zhi = encode_jax(rects[..., 1].astype(jnp.int32), theta)
+    return zlo, zhi

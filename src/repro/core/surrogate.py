@@ -1,0 +1,96 @@
+"""Random-forest regression surrogate for SMBO (paper §5.2 uses an RF
+surrogate instead of a GP).  Pure numpy CART; small-n regime (SMBO evaluates
+tens-to-hundreds of configurations), so clarity over speed."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    thresh: float = 0.0
+    left: "._Node" = None
+    right: "._Node" = None
+    value: float = 0.0
+
+
+def _build_tree(X, y, rng, depth, max_depth, min_leaf, n_feat):
+    node = _Node(value=float(np.mean(y)))
+    if depth >= max_depth or len(y) < 2 * min_leaf or np.ptp(y) == 0:
+        return node
+    feats = rng.choice(X.shape[1], size=min(n_feat, X.shape[1]), replace=False)
+    best = None  # (sse, f, t)
+    for f in feats:
+        xs = X[:, f]
+        order = np.argsort(xs)
+        xs_s, y_s = xs[order], y[order]
+        csum = np.cumsum(y_s)
+        csq = np.cumsum(y_s**2)
+        n = len(y_s)
+        ks = np.arange(min_leaf, n - min_leaf + 1)
+        if len(ks) == 0:
+            continue
+        lsum, lsq = csum[ks - 1], csq[ks - 1]
+        rsum, rsq = csum[-1] - lsum, csq[-1] - lsq
+        sse = (lsq - lsum**2 / ks) + (rsq - rsum**2 / (n - ks))
+        # skip splits between equal x values
+        valid = xs_s[ks - 1] < xs_s[ks]
+        if not valid.any():
+            continue
+        sse = np.where(valid, sse, np.inf)
+        k = int(np.argmin(sse))
+        if best is None or sse[k] < best[0]:
+            t = (xs_s[ks[k] - 1] + xs_s[ks[k]]) / 2.0
+            best = (float(sse[k]), int(f), float(t))
+    if best is None or not np.isfinite(best[0]):
+        return node
+    _, f, t = best
+    m = X[:, f] <= t
+    node.feature, node.thresh = f, t
+    node.left = _build_tree(X[m], y[m], rng, depth + 1, max_depth, min_leaf, n_feat)
+    node.right = _build_tree(X[~m], y[~m], rng, depth + 1, max_depth, min_leaf, n_feat)
+    return node
+
+
+def _predict_tree(node, X):
+    out = np.empty(len(X))
+    stack = [(node, np.arange(len(X)))]
+    while stack:
+        nd, idx = stack.pop()
+        if nd.feature < 0 or nd.left is None:
+            out[idx] = nd.value
+            continue
+        m = X[idx, nd.feature] <= nd.thresh
+        stack.append((nd.left, idx[m]))
+        stack.append((nd.right, idx[~m]))
+    return out
+
+
+class RandomForest:
+    def __init__(self, n_trees: int = 32, max_depth: int = 10,
+                 min_leaf: int = 2, seed: int = 0):
+        self.n_trees = n_trees
+        self.max_depth = max_depth
+        self.min_leaf = min_leaf
+        self.rng = np.random.default_rng(seed)
+        self.trees = []
+
+    def fit(self, X: np.ndarray, y: np.ndarray):
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        n_feat = max(1, int(np.ceil(X.shape[1] / 3)))
+        self.trees = []
+        for _ in range(self.n_trees):
+            idx = self.rng.integers(0, len(y), size=len(y))
+            self.trees.append(_build_tree(X[idx], y[idx], self.rng, 0,
+                                          self.max_depth, self.min_leaf, n_feat))
+        return self
+
+    def predict(self, X: np.ndarray):
+        """(mean, std) across trees — std feeds Expected Improvement."""
+        X = np.asarray(X, np.float64)
+        preds = np.stack([_predict_tree(t, X) for t in self.trees])
+        return preds.mean(axis=0), preds.std(axis=0)

@@ -1,0 +1,140 @@
+"""64-bit z-address arithmetic as dual-uint32 ("Z64") — TPU native.
+
+TPUs have no native uint64; every z-address in the JAX/TPU path is a pair of
+int32 words laid out as ``[..., 0] = hi, [..., 1] = lo``.  All comparisons use
+the sign-flip trick so that int32 compares behave as unsigned compares.
+
+The numpy reference path uses real ``np.uint64`` — conversion helpers live
+here too so tests can check the two representations against each other.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+SIGN = np.int32(np.uint32(0x80000000).view(np.int32))  # -2**31
+
+# ---------------------------------------------------------------------------
+# numpy <-> Z64 conversions
+# ---------------------------------------------------------------------------
+
+
+def u64_to_z64(z: np.ndarray) -> np.ndarray:
+    """uint64 array -> int32 array with trailing dim 2 (hi, lo)."""
+    z = np.asarray(z, dtype=np.uint64)
+    hi = (z >> np.uint64(32)).astype(np.uint32).view(np.int32)
+    lo = (z & np.uint64(0xFFFFFFFF)).astype(np.uint32).view(np.int32)
+    return np.stack([hi, lo], axis=-1)
+
+
+def z64_to_u64(z: np.ndarray) -> np.ndarray:
+    """int32 (..., 2) -> uint64 array."""
+    z = np.asarray(z)
+    hi = z[..., 0].view(np.int32).astype(np.int64).view(np.uint64) & np.uint64(0xFFFFFFFF)
+    lo = z[..., 1].view(np.int32).astype(np.int64).view(np.uint64) & np.uint64(0xFFFFFFFF)
+    return (hi << np.uint64(32)) | lo
+
+
+# ---------------------------------------------------------------------------
+# unsigned helpers on int32 words (jax)
+# ---------------------------------------------------------------------------
+
+
+def u32_lt(a, b):
+    """unsigned a < b on int32 words."""
+    return (a ^ SIGN) < (b ^ SIGN)
+
+
+def u32_le(a, b):
+    return (a ^ SIGN) <= (b ^ SIGN)
+
+
+# ---------------------------------------------------------------------------
+# Z64 comparisons (trailing dim 2)
+# ---------------------------------------------------------------------------
+
+
+def z64_lt(a, b):
+    """lexicographic unsigned < on (..., 2) int32."""
+    ahi, alo = a[..., 0], a[..., 1]
+    bhi, blo = b[..., 0], b[..., 1]
+    return u32_lt(ahi, bhi) | ((ahi == bhi) & u32_lt(alo, blo))
+
+
+def z64_le(a, b):
+    ahi, alo = a[..., 0], a[..., 1]
+    bhi, blo = b[..., 0], b[..., 1]
+    return u32_lt(ahi, bhi) | ((ahi == bhi) & u32_le(alo, blo))
+
+
+def z64_eq(a, b):
+    return (a[..., 0] == b[..., 0]) & (a[..., 1] == b[..., 1])
+
+
+def z64_max(a, b):
+    take_a = z64_lt(b, a)
+    return jnp.where(take_a[..., None], a, b)
+
+
+def z64_min(a, b):
+    take_a = z64_lt(a, b)
+    return jnp.where(take_a[..., None], a, b)
+
+
+# ---------------------------------------------------------------------------
+# Z64 arithmetic
+# ---------------------------------------------------------------------------
+
+
+def z64_sub(a, b):
+    """a - b (mod 2^64) on (..., 2) int32.  Callers ensure a >= b when the
+    difference is interpreted as a magnitude."""
+    ahi, alo = a[..., 0], a[..., 1]
+    bhi, blo = b[..., 0], b[..., 1]
+    lo = alo - blo  # int32 wraparound == u32 wraparound
+    borrow = u32_lt(alo, blo).astype(jnp.int32)
+    hi = ahi - bhi - borrow
+    return jnp.stack([hi, lo], axis=-1)
+
+
+def z64_add(a, b):
+    ahi, alo = a[..., 0], a[..., 1]
+    bhi, blo = b[..., 0], b[..., 1]
+    lo = alo + blo
+    carry = u32_lt(lo, alo).astype(jnp.int32)
+    hi = ahi + bhi + carry
+    return jnp.stack([hi, lo], axis=-1)
+
+
+def z64_to_f32(z):
+    """Approximate float32 magnitude (for cost heuristics only)."""
+    hi = z[..., 0].astype(jnp.uint32).astype(jnp.float32)
+    lo = z[..., 1].astype(jnp.uint32).astype(jnp.float32)
+    return hi * jnp.float32(2.0**32) + lo
+
+
+# ---------------------------------------------------------------------------
+# vectorized binary search over a sorted Z64 array (exact, branchless)
+# ---------------------------------------------------------------------------
+
+
+def z64_searchsorted(keys, query, side: str = "left"):
+    """Like ``np.searchsorted(keys, query, side)`` for Z64.
+
+    keys: (n, 2) int32 sorted ascending (unsigned); query: (..., 2) int32.
+    Returns int32 indices in [0, n].  Runs ceil(log2(n+1)) fixed steps.
+    """
+    n = keys.shape[0]
+    steps = max(1, int(np.ceil(np.log2(n + 1))))
+    lo = jnp.zeros(query.shape[:-1], jnp.int32)
+    hi = jnp.full(query.shape[:-1], n, jnp.int32)
+    for _ in range(steps):
+        mid = (lo + hi) // 2
+        mid_key = keys[jnp.clip(mid, 0, n - 1)]
+        if side == "left":
+            go_right = z64_lt(mid_key, query)
+        else:
+            go_right = z64_le(mid_key, query)
+        lo = jnp.where(go_right & (lo < hi), mid + 1, lo)
+        hi = jnp.where(~go_right & (lo < hi), mid, hi)
+    return lo

@@ -1,0 +1,79 @@
+"""Synthetic datasets shaped like the paper's three real datasets (§7.1).
+
+The container is offline, so we generate distribution-matched surrogates:
+  * osm   — 2-D, heavy spatial clustering (GMM of city-like clusters over a
+            continent-scale bounding box) — matches OSM North America's
+            clustered GPS points.
+  * nyc   — 3-D (pickup-location-1D-projected, trip distance, total amount):
+            correlated, heavy-tailed marginals.
+  * stock — 4-D (high, low, adj-close, volume): near-degenerate correlation
+            between price columns + log-normal volume.
+
+All datasets are scaled to duplicate-free integers in [0, 2^K - 1]^d with
+K = default_K(d), mirroring the paper's preprocessing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.theta import default_K
+
+
+def _to_int_grid(x: np.ndarray, K: int) -> np.ndarray:
+    """Scale each column to [0, 2^K-1] integers; drop duplicate rows."""
+    lo = x.min(axis=0)
+    hi = x.max(axis=0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    scaled = (x - lo) / span * (2.0**K - 1.0)
+    ints = np.minimum(np.floor(scaled), 2.0**K - 1.0).astype(np.uint64)
+    ints = np.unique(ints, axis=0)  # paper removes duplicates
+    return ints
+
+
+def make_osm(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    n_clusters = 64
+    centers = rng.uniform(0, 1, size=(n_clusters, 2))
+    weights = rng.pareto(1.2, n_clusters) + 0.05
+    weights /= weights.sum()
+    sizes = rng.multinomial(int(n * 0.9), weights)
+    pts = []
+    for c, s in zip(range(n_clusters), sizes):
+        sigma = rng.uniform(0.002, 0.03)
+        pts.append(centers[c] + rng.normal(0, sigma, size=(s, 2)))
+    pts.append(rng.uniform(0, 1, size=(n - sum(sizes), 2)))  # rural noise
+    x = np.clip(np.concatenate(pts), 0, 1)
+    return _to_int_grid(x, default_K(2))
+
+
+def make_nyc(n: int, seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    # pickup location along a few dense corridors
+    loc = np.concatenate([
+        rng.normal(0.4, 0.05, size=int(n * 0.6)),
+        rng.normal(0.7, 0.08, size=int(n * 0.3)),
+        rng.uniform(0, 1, size=n - int(n * 0.6) - int(n * 0.3)),
+    ])
+    dist = rng.gamma(2.0, 1.5, size=n)                     # trip miles
+    fare = 2.5 + 2.6 * dist + rng.gamma(2.0, 2.0, size=n)  # correlated amount
+    x = np.stack([np.clip(loc, 0, 1), dist, fare], axis=1)
+    return _to_int_grid(x, default_K(3))
+
+
+def make_stock(n: int, seed: int = 2) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    base = np.exp(rng.normal(3.0, 1.2, size=n))            # price level
+    spread = np.abs(rng.normal(0, 0.03, size=n)) * base
+    high = base + spread
+    low = base - spread
+    close = low + rng.uniform(0, 1, size=n) * (high - low)
+    vol = np.exp(rng.normal(11.0, 2.0, size=n))
+    x = np.stack([high, low, close, vol], axis=1)
+    return _to_int_grid(np.log1p(x), default_K(4))
+
+
+DATASETS = {"osm": make_osm, "nyc": make_nyc, "stock": make_stock}
+
+
+def make_dataset(name: str, n: int, seed: int = 0) -> np.ndarray:
+    return DATASETS[name](n, seed)

@@ -1,0 +1,20 @@
+"""jit'd public wrapper: (B, H, S, dh) GQA attention -> Pallas or jnp ref."""
+from __future__ import annotations
+
+from .kernel import flash_attention_pallas
+from .ref import mha_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    backend: str = "xla", bq: int = 512, bk: int = 512,
+                    interpret: bool = False):
+    """q: (B, H, S, dh); k/v: (B, KH, S, dh)."""
+    if backend == "xla":
+        return mha_ref(q, k, v, causal=causal, window=window)
+    B, H, S, dh = q.shape
+    KH = k.shape[1]
+    out = flash_attention_pallas(
+        q.reshape(B * H, S, dh), k.reshape(B * KH, S, dh),
+        v.reshape(B * KH, S, dh), causal=causal, window=window,
+        bq=bq, bk=bk, interpret=interpret)
+    return out.reshape(B, H, S, dh)

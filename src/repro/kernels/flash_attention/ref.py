@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: full (optionally causal / sliding-window) attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window: int = 0, scale=None):
+    """q: (B, H, S, dh); k/v: (B, KH, S, dh) with H % KH == 0.
+    window > 0 enables sliding-window attention (causal only).
+    Returns (B, H, S, dh) in q.dtype; softmax in fp32."""
+    B, H, S, dh = q.shape
+    KH = k.shape[1]
+    g = H // KH
+    scale = scale if scale is not None else dh ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki >= qi - window + 1
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.nan_to_num(jnp.exp(logits - logits.max(-1, keepdims=True)))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: batched points-in-rectangle counting.
+
+This is the scan-with-filtering hot loop of query processing (paper §6 step
+2) after the engine has gathered candidate pages: for each (query, page)
+pair g, count the page's points inside the query rectangle.  Coordinates are
+unsigned 32-bit (sign-flip compares).  Layout (d, cap) puts the point axis on
+the VPU lanes.
+
+Block shape: (block_g, d, cap) int32 → with block_g=8, d=4, cap=1024 the
+input tile is 128 KiB; rect/size/counts tiles are negligible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_SIGN = np.int32(-2**31)
+
+
+def _filter_kernel(pts_ref, rect_ref, size_ref, out_ref):
+    pts = pts_ref[...]          # (bg, d, cap)
+    lo = rect_ref[:, :, 0:1]    # (bg, d, 1)
+    hi = rect_ref[:, :, 1:2]
+    inside = ((lo ^ _SIGN) <= (pts ^ _SIGN)) & ((pts ^ _SIGN) <= (hi ^ _SIGN))
+    ok = jnp.all(inside, axis=1)                      # (bg, cap)
+    cap = pts.shape[-1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, ok.shape, 1)
+    valid = pos < size_ref[:, 0:1]
+    out_ref[:, 0] = jnp.sum(jnp.where(ok & valid, 1, 0), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "interpret"))
+def window_filter_pallas(pts, rect, size, block_g: int = 8,
+                         interpret: bool = False):
+    """pts: (G, d, cap) int32; rect: (G, d, 2) int32; size: (G,) int32
+    -> (G,) int32.  G % block_g == 0 (caller pads)."""
+    G, d, cap = pts.shape
+    assert G % block_g == 0
+    counts = pl.pallas_call(
+        _filter_kernel,
+        grid=(G // block_g,),
+        in_specs=[
+            pl.BlockSpec((block_g, d, cap), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_g, d, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, 1), jnp.int32),
+        interpret=interpret,
+    )(pts, rect, size[:, None])
+    return counts[:, 0]

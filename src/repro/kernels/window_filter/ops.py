@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the window-filter kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import window_filter_pallas
+from .ref import window_filter_ref
+
+
+def window_filter(pts, rect, size, *, backend: str = "xla",
+                  block_g: int = 8, interpret: bool = False):
+    """pts: (G, d, cap) int32; rect: (G, d, 2); size: (G,) -> (G,) int32."""
+    if backend == "xla":
+        return window_filter_ref(pts, rect, size)
+    G = pts.shape[0]
+    pad = (-G) % block_g
+    if pad:
+        pts = jnp.pad(pts, ((0, pad), (0, 0), (0, 0)))
+        rect = jnp.pad(rect, ((0, pad), (0, 0), (0, 0)))
+        size = jnp.pad(size, (0, pad))
+    out = window_filter_pallas(pts, rect, size, block_g=block_g,
+                               interpret=interpret)
+    return out[:G]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the window-filter (points-in-rectangle count) kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_SIGN = jnp.int32(-2**31)
+
+
+def _u32_le(a, b):
+    return (a ^ _SIGN) <= (b ^ _SIGN)
+
+
+def window_filter_ref(pts, rect, size):
+    """pts: (G, d, cap) int32 (unsigned coords); rect: (G, d, 2) int32
+    [lo, hi]; size: (G,) int32 valid-point count.  -> (G,) int32 counts."""
+    lo = rect[:, :, 0:1]
+    hi = rect[:, :, 1:2]
+    inside = _u32_le(lo, pts) & _u32_le(pts, hi)  # (G, d, cap)
+    ok = jnp.all(inside, axis=1)  # (G, cap)
+    valid = jnp.arange(pts.shape[-1])[None, :] < size[:, None]
+    return jnp.sum(ok & valid, axis=-1).astype(jnp.int32)

@@ -1,0 +1,98 @@
+"""Attribute roofline terms to HLO ops (hillclimb profiling tool).
+
+    PYTHONPATH=src python -m repro.launch.attribute \
+        --hlo results/dryrun/hlo/<cell>.hlo.gz [--kind traffic|wire] [--top 15]
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import re
+
+from ..dist.hlo_analysis import (HloAnalyzer, _CALL_ATTR_RE, _COLLECTIVES,
+                                 _FUSED_ANCHORS, _NO_TRAFFIC, _shape_bytes)
+
+
+def attribute(text: str, kind: str = "traffic", top: int = 15):
+    an = HloAnalyzer(text)
+    # re-read raw lines to recover metadata op_name
+    comps_raw = {}
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$", line)
+            if m:
+                cur = m.group(2)
+                comps_raw[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        comps_raw[cur].append(line)
+
+    meta_of = {}
+    for cname, lines in comps_raw.items():
+        for line in lines:
+            mm = re.match(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=", line)
+            if mm:
+                md = re.search(r'op_name="([^"]*)"', line)
+                meta_of[mm.group(1)] = md.group(1) if md else "?"
+
+    rows = []
+
+    def walk(comp, mult):
+        for op in an.comps.get(comp, []):
+            oc = op.opcode
+            if oc == "while":
+                cm = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                trip = an._trip_count(cm.group(1)) if cm else 1
+                walk(bm.group(1), mult * trip)
+                continue
+            if oc == "call":
+                m = _CALL_ATTR_RE.search(op.rest)
+                if m:
+                    walk(m.group(1), mult)
+                continue
+            if oc in _NO_TRAFFIC:
+                continue
+            if kind == "wire":
+                base = oc[:-6] if oc.endswith("-start") else oc
+                if base not in _COLLECTIVES:
+                    continue
+                nbytes = max(an._operand_bytes(op), _shape_bytes(op.shape))
+                g = an._group_size(op)
+                w = 2 * nbytes * (g - 1) / g if base == "all-reduce" else (
+                    nbytes if base == "collective-permute"
+                    else nbytes * (g - 1) / g)
+                rows.append((w * mult, base, op.shape[:48],
+                             meta_of.get(op.name, "?")[:100]))
+            else:
+                if not (oc in _FUSED_ANCHORS or oc in _COLLECTIVES
+                        or oc.endswith("-start")):
+                    continue
+                rows.append((an._op_traffic(op) * mult, oc, op.shape[:48],
+                             meta_of.get(op.name, "?")[:100]))
+
+    walk(an.entry, 1.0)
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total {kind}: {total/1e9:.2f} GB")
+    for b, oc, shape, meta in rows[:top]:
+        print(f"{b/1e9:9.2f} GB  {oc:20s} {shape:50s} {meta}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo", required=True)
+    ap.add_argument("--kind", default="traffic", choices=["traffic", "wire"])
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    with gzip.open(args.hlo, "rt") as f:
+        text = f.read()
+    attribute(text, args.kind, args.top)
+
+
+if __name__ == "__main__":
+    main()

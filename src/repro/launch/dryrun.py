@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary.
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh pod|multipod] [--out results/dryrun]
+
+Per cell: builds the production mesh, the step function with its shardings,
+AOT-compiles against ShapeDtypeStruct inputs (no allocation), prints
+memory_analysis()/cost_analysis(), and writes a JSON record with the
+roofline terms (dist/roofline.py)."""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs.base import SHAPES, input_specs, shape_applicable
+from ..configs.registry import ARCHS, get_arch
+from ..dist import roofline as rl
+from ..optim.adamw import init_opt_state
+from ..train.steps import (make_decode_step, make_prefill_step,
+                           make_train_step, param_and_opt_shardings)
+from .mesh import make_production_mesh
+
+
+def _spec_tree_to_struct(tree, shardings):
+    """ShapeDtypeStructs carrying shardings (AOT lowering inputs)."""
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        tree, shardings)
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                out_dir: str = "results/dryrun", verbose: bool = True,
+                overrides: dict = None):
+    cfg = get_arch(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "skipped",
+               "reason": "full-attention arch: no sub-quadratic long-context path"}
+        _write(out_dir, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        fn, in_sh, _, rules = make_train_step(cfg, shape, mesh, donate=False)
+        pshard, oshard, batch_sh = in_sh
+        p_struct = _param_structs(cfg, rules, pshard)
+        o_struct = _opt_structs(p_struct, oshard)
+        b_struct = _spec_tree_to_struct(specs, batch_sh)
+        lowered = fn.lower(p_struct, o_struct, b_struct)
+    elif shape.kind == "prefill":
+        fn, (pshard, batch_sh), rules = make_prefill_step(cfg, shape, mesh)
+        p_struct = _param_structs(cfg, rules, pshard)
+        b_struct = _spec_tree_to_struct(specs, batch_sh)
+        lowered = fn.lower(p_struct, b_struct)
+    else:  # decode
+        fn, (pshard, batch_sh, sshard), state_shapes, rules = \
+            make_decode_step(cfg, shape, mesh, donate=False)
+        p_struct = _param_structs(cfg, rules, pshard)
+        b_struct = _spec_tree_to_struct(
+            {k: v for k, v in specs.items()}, batch_sh)
+        s_struct = _spec_tree_to_struct(
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                         state_shapes), sshard)
+        lowered = fn.lower(p_struct, b_struct, s_struct)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    hlo_text = compiled.as_text()
+    if os.environ.get("REPRO_SAVE_HLO", "1") == "1":
+        import gzip
+        os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+        hname = f"{arch}__{shape_name}__{'2_16_16' if multi_pod else '16_16'}.hlo.gz"
+        with gzip.open(os.path.join(out_dir, "hlo", hname), "wt") as f:
+            f.write(hlo_text)
+    roof = rl.analyze(compiled, lowered_text=hlo_text)
+    mf = rl.model_flops(cfg, shape)
+    chips = 512 if multi_pod else 256
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf / chips,
+        "roofline": roof.to_dict(),
+        "useful_flops_ratio": (mf / chips) / max(roof.flops_per_device, 1.0),
+    }
+    if verbose:
+        print(f"== {arch} × {shape_name} × {rec['mesh']} ==")
+        print("memory_analysis:", roof.memory_stats)
+        print("cost_analysis: flops/device={:.3e} bytes/device={:.3e}".format(
+            roof.flops_per_device, roof.bytes_per_device))
+        print("collectives:", json.dumps(roof.collectives))
+        print("roofline terms (s): compute={:.4g} memory={:.4g} "
+              "collective={:.4g} dominant={}".format(
+                  roof.compute_s, roof.memory_s, roof.collective_s,
+                  roof.dominant))
+        print("MODEL_FLOPS/HLO_FLOPS per chip: {:.3f}".format(
+            rec["useful_flops_ratio"]))
+    _write(out_dir, rec)
+    return rec
+
+
+def _param_structs(cfg, rules, pshard):
+    from ..models.transformer import init_model
+    shapes = jax.eval_shape(
+        lambda k: init_model(k, cfg, rules)[0], jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        shapes, pshard)
+
+
+def _opt_structs(p_struct, oshard):
+    opt_shapes = jax.eval_shape(init_opt_state, p_struct)
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        opt_shapes, oshard)
+
+
+def _write(out_dir, rec):
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh'].replace('x','_')}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of ArchConfig field overrides (perf iters)")
+    args = ap.parse_args()
+
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    overrides = json.loads(args.overrides) if args.overrides else None
+    failures = []
+    if args.arch == "lmsfc-serve" and not args.all:
+        kw = {}
+        if args.overrides:
+            kw = json.loads(args.overrides)
+        for mp in meshes:
+            dryrun_lmsfc_serve(mp, out_dir=args.out, **kw)
+        print("dry-run complete")
+        return
+    for a, s in cells:
+        for mp in meshes:
+            try:
+                dryrun_cell(a, s, mp, out_dir=args.out, overrides=overrides)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((a, s, mp, str(e)[:200]))
+                _write(args.out, {"arch": a, "shape": s,
+                                  "mesh": "2x16x16" if mp else "16x16",
+                                  "status": "failed", "error": str(e)[:500]})
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+
+
+# ---------------------------------------------------------------------------
+# lmsfc-serve: the paper's distributed query engine on the production mesh
+# ---------------------------------------------------------------------------
+
+
+def dryrun_lmsfc_serve(multi_pod: bool, out_dir: str = "results/dryrun",
+                       n_pages: int = 2**22, cap: int = 1024, d: int = 2,
+                       q_batch: int = 1024, max_cand: int = 64,
+                       q_chunk: int = 16, k_maxsplit: int = 4,
+                       verbose: bool = True):
+    """Lower+compile the shard_map window-query engine: pages range-sharded
+    over every mesh axis, queries replicated, psum-reduced counts.
+    n_pages=2^22 × cap 1024 ≈ 4.3B points (~34 GB coords) global."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..core.serve import ServingArrays, make_distributed_query_fn
+    from ..core.theta import zorder, default_K
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = tuple(mesh.axis_names)
+    theta = zorder(d, default_K(d))
+    fn, shard_specs = make_distributed_query_fn(
+        theta, mesh, max_cand=max_cand, q_chunk=q_chunk,
+        k_maxsplit=k_maxsplit)
+
+    def sds(shape, dtype, spec):
+        return jax.ShapeDtypeStruct(shape, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    arrays = ServingArrays(
+        points=sds((n_pages, d, cap), jnp.int32, P(axes)),
+        page_zmin=sds((n_pages, 2), jnp.int32, P(axes)),
+        page_zmax=sds((n_pages, 2), jnp.int32, P(axes)),
+        page_mbr=sds((n_pages, d, 2), jnp.int32, P(axes)),
+        page_size=sds((n_pages,), jnp.int32, P(axes)),
+    )
+    queries = sds((q_batch, d, 2), jnp.int32, P())
+
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(arrays, queries)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    hlo_text = compiled.as_text()
+    if os.environ.get("REPRO_SAVE_HLO", "1") == "1":
+        import gzip
+        os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+        hname = (f"lmsfc-serve__q{q_batch}_p{n_pages}_c{max_cand}_k{k_maxsplit}"
+                 f"__{'2_16_16' if multi_pod else '16_16'}.hlo.gz")
+        with gzip.open(os.path.join(out_dir, "hlo", hname), "wt") as f:
+            f.write(hlo_text)
+    roof = rl.analyze(compiled, lowered_text=hlo_text)
+    chips = 512 if multi_pod else 256
+    rec = {"arch": "lmsfc-serve",
+           "shape": f"q{q_batch}_p{n_pages}_c{max_cand}_k{k_maxsplit}",
+           "mesh": "2x16x16" if multi_pod else "16x16", "status": "ok",
+           "chips": chips, "lower_s": round(t_lower, 1),
+           "compile_s": round(t_compile, 1),
+           "roofline": roof.to_dict(),
+           "global_points": n_pages * cap,
+           "model_flops_total": 0, "model_flops_per_chip": 0,
+           "useful_flops_ratio": 0}
+    if verbose:
+        print(f"== lmsfc-serve × q{q_batch}_p{n_pages} × {rec['mesh']} ==")
+        print("memory_analysis:", roof.memory_stats)
+        print("roofline terms (s): compute={:.4g} memory={:.4g} "
+              "collective={:.4g} dominant={}".format(
+                  roof.compute_s, roof.memory_s, roof.collective_s,
+                  roof.dominant))
+    _write(out_dir, rec)
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Re-run the roofline analyzer over cached HLO (results/<dir>/hlo/*.hlo.gz)
+and patch the per-cell JSON records — no recompilation.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import gzip
+import json
+import os
+
+from ..configs.base import SHAPES
+from ..configs.registry import ARCHS, get_arch
+from ..dist import roofline as rl
+from ..dist.hlo_analysis import analyze_hlo_text
+
+
+def reanalyze(dirname: str):
+    for hf in sorted(glob.glob(os.path.join(dirname, "hlo", "*.hlo.gz"))):
+        base = os.path.basename(hf)[:-len(".hlo.gz")]
+        jf = os.path.join(dirname, base + ".json")
+        if not os.path.exists(jf):
+            continue
+        with open(jf) as f:
+            rec = json.load(f)
+        with gzip.open(hf, "rt") as f:
+            text = f.read()
+        la = analyze_hlo_text(text)
+        flops = float(la["flops"])
+        nbytes = float(la["bytes"])
+        wire = float(la["wire_bytes"])
+        terms = {"compute": flops / rl.PEAK_FLOPS,
+                 "memory": nbytes / rl.HBM_BW,
+                 "collective": wire / rl.LINK_BW}
+        ro = rec.get("roofline", {})
+        ro.update(flops_per_device=flops, bytes_per_device=nbytes,
+                  wire_bytes_per_device=wire,
+                  compute_s=terms["compute"], memory_s=terms["memory"],
+                  collective_s=terms["collective"],
+                  dominant=max(terms, key=terms.get),
+                  collectives=la["collectives"])
+        ro.setdefault("memory_stats", {})["bytes_unfused_upper_bound"] = \
+            float(la["bytes_unfused"])
+        rec["roofline"] = ro
+        if rec.get("arch") in ARCHS and rec.get("shape") in SHAPES:
+            cfg = get_arch(rec["arch"])
+            mf = rl.model_flops(cfg, SHAPES[rec["shape"]])
+            rec["model_flops_total"] = mf
+            rec["model_flops_per_chip"] = mf / rec.get("chips", 256)
+            rec["useful_flops_ratio"] = (mf / rec.get("chips", 256)) / max(flops, 1.0)
+        with open(jf, "w") as f:
+            json.dump(rec, f, indent=1)
+        print("reanalyzed", base)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    reanalyze(args.dir)
+
+
+if __name__ == "__main__":
+    main()

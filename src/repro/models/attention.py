@@ -1,0 +1,216 @@
+"""Attention layers: GQA/MQA with qk-norm, RoPE/M-RoPE, sliding window,
+cross-attention; blocked "triangular" online-softmax for the XLA path
+(causal costs ~ideal flops: the kv scan per q-chunk covers only chunks
+<= q-chunk, so HLO flops match the causal roofline up to the diagonal
+half-block) and a Pallas backend for real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.flash_attention.ops import flash_attention
+from .common import apply_mrope, apply_rope, dense, head_rms_norm
+
+NEG_INF = jnp.float32(-1e30)
+
+
+# ---------------------------------------------------------------------------
+# blocked attention (XLA) — training/prefill
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(q, k, v, q0, k0, causal, window):
+    """q: (B, bq, H, dh) fp32-scaled; k/v: (B, bk, KH, dh).
+    Returns (scores-reduced partials): m (B, bq, H), l, acc (B, bq, H, dh)."""
+    B, bq, H, dh = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, bq, KH, G, dh)
+    s = jnp.einsum("bqkgd,btkd->bqkgt", qg, k.astype(jnp.float32))
+    rows = q0 + jnp.arange(bq)[:, None]
+    cols = k0 + jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((bq, k.shape[1]), bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols >= rows - window + 1
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bqkgt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return (m.reshape(B, bq, H), l.reshape(B, bq, H),
+            acc.reshape(B, bq, H, dh))
+
+
+def blocked_attention(q, k, v, *, causal=True, window=0, q_chunk=1024,
+                      kv_chunk=1024, backend="xla"):
+    """q: (B, S, H, dh); k/v: (B, T, KH, dh) -> (B, S, H, dh).
+
+    XLA path: python loop over q chunks; per chunk a lax.scan over exactly
+    the kv chunks it can see (static triangular slicing), so causal/sliding
+    windows do near-ideal flops without dynamic shapes.
+    """
+    B, S, H, dh = q.shape
+    T = k.shape[1]
+    if backend == "pallas":
+        o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=causal,
+                            window=window, backend="pallas")
+        return o.transpose(0, 2, 1, 3)
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    if S % q_chunk:
+        q_chunk = S  # odd lengths (tests): single block
+    if T % kv_chunk:
+        kv_chunk = T
+    nq, nk = S // q_chunk, T // kv_chunk
+    scale = dh ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    outs = []
+    kc = k.reshape(B, nk, kv_chunk, *k.shape[2:])
+    vc = v.reshape(B, nk, kv_chunk, *v.shape[2:])
+    for qi in range(nq):
+        qb = qf[:, qi * q_chunk:(qi + 1) * q_chunk]
+        lo = 0
+        hi = nk
+        if causal:
+            hi = min(nk, ((qi + 1) * q_chunk + kv_chunk - 1) // kv_chunk)
+        if window > 0:
+            lo = max(0, (qi * q_chunk - window + 1) // kv_chunk)
+        ks = jnp.moveaxis(kc[:, lo:hi], 1, 0)  # (nkc, B, bk, KH, dh)
+        vs = jnp.moveaxis(vc[:, lo:hi], 1, 0)
+
+        def step(carry, xs, qb=qb, qi=qi, lo=lo):
+            m, l, acc, ki = carry
+            kb, vb = xs
+            mb, lb, ab = _attn_block(qb, kb, vb, qi * q_chunk,
+                                     ki * kv_chunk, causal, window)
+            m_new = jnp.maximum(m, mb)
+            a1 = jnp.exp(m - m_new)
+            a2 = jnp.exp(mb - m_new)
+            l_new = l * a1 + lb * a2
+            acc_new = acc * a1[..., None] + ab * a2[..., None]
+            return (m_new, l_new, acc_new, ki + 1), None
+
+        m0 = jnp.full((B, q_chunk, H), NEG_INF)
+        l0 = jnp.zeros((B, q_chunk, H), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, H, dh), jnp.float32)
+        (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(lo)),
+                                         (ks, vs))
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, window=0):
+    """q: (B, 1, H, dh); caches: (B, KH, S, dh); cur_len: int32 scalar —
+    number of valid cache positions (the new token is at cur_len-1)."""
+    B, _, H, dh = q.shape
+    KH = k_cache.shape[1]
+    G = H // KH
+    S = k_cache.shape[2]
+    scale = dh ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, KH, G, dh)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k_cache.astype(jnp.float32))
+    pos = jnp.arange(S)[None, None, None, :]
+    mask = pos < cur_len
+    if window > 0:
+        mask &= pos >= cur_len - window
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgt,bktd->bkgd", p / jnp.maximum(l, 1e-30),
+                   v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention layer (params + apply)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, rules):
+    """cfg needs: d_model, n_heads, n_kv_heads, d_head, qk_norm."""
+    ks = jax.random.split(key, 5)
+    D, H, KH, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense(ks[0], D, H * dh, rules.dense_in_heads(D, H, H * dh))
+    p["wk"], s["wk"] = dense(ks[1], D, KH * dh, rules.dense_in_heads(D, KH, KH * dh))
+    p["wv"], s["wv"] = dense(ks[2], D, KH * dh, rules.dense_in_heads(D, KH, KH * dh))
+    p["wo"], s["wo"] = dense(ks[3], H * dh, D, rules.dense_out(H * dh, D))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones(dh, jnp.bfloat16)
+        p["k_norm"] = jnp.ones(dh, jnp.bfloat16)
+        s["q_norm"] = rules.vector()
+        s["k_norm"] = rules.vector()
+    return p, s
+
+
+def attn_qkv(p, cfg, x, positions):
+    """projections + qk-norm + rotary; returns q (B,S,H,dh), k/v (B,S,KH,dh).
+    positions=None skips rotary (cross-attention)."""
+    B, S, D = x.shape
+    H, KH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, KH, dh)
+    v = (x @ p["wv"]).reshape(B, S, KH, dh)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"])
+        k = head_rms_norm(k, p["k_norm"])
+    if positions is None:
+        return q, k, v
+    if cfg.mrope_sections:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.use_rope:
+        pos1d = positions[..., 0] if positions.ndim == 3 else positions
+        q = apply_rope(q, pos1d, cfg.rope_theta)
+        k = apply_rope(k, pos1d, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_q_only(p, cfg, x):
+    """Q projection only (decoder side of cross-attention, no rotary)."""
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"])
+    return q
+
+
+def attn_kv_only(p, cfg, x):
+    """K/V projections only (encoder side of cross-attention, no rotary)."""
+    B, S, D = x.shape
+    KH, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (x @ p["wk"]).reshape(B, S, KH, dh)
+    v = (x @ p["wv"]).reshape(B, S, KH, dh)
+    if cfg.qk_norm:
+        k = head_rms_norm(k, p["k_norm"])
+    return k, v
+
+
+def attention_layer(p, cfg, x, positions, *, causal=True, backend="xla",
+                    kv_override=None, return_kv=False):
+    """Full layer: qkv -> blocked attention -> output proj.
+    kv_override: (k, v) from an encoder for cross-attention.
+    return_kv: also return (k, v) as (B, KH, S, dh) for KV-cache building."""
+    B, S, D = x.shape
+    if kv_override is not None:
+        q = attn_q_only(p, cfg, x)
+        k, v = kv_override
+        causal = False
+    else:
+        q, k, v = attn_qkv(p, cfg, x, positions)
+    o = blocked_attention(q, k, v, causal=causal, window=cfg.window,
+                          q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+                          backend=backend)
+    out = o.reshape(B, S, -1) @ p["wo"]
+    if return_kv:
+        return out, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    return out

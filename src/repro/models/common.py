@@ -1,0 +1,129 @@
+"""Shared model machinery: param trees with parallel PartitionSpec trees,
+norms, rotary embeddings (incl. 3-section M-RoPE), stable sharded
+cross-entropy."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# param builder: init functions return (params, specs) parallel pytrees
+# ---------------------------------------------------------------------------
+
+
+class Params(dict):
+    """dict subclass so pytrees stay plain dicts."""
+
+
+def dense(key, d_in, d_out, spec, dtype=jnp.bfloat16, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    return w, spec
+
+
+def stack_init(init_fn: Callable, key, n: int):
+    """vmap an init over n layers; specs get a leading None (layer) dim."""
+    keys = jax.random.split(key, n)
+    p0, s0 = init_fn(keys[0])
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    specs = jax.tree.map(lambda s: P(None, *s), s0,
+                         is_leaf=lambda x: isinstance(x, P))
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def head_rms_norm(x, w, eps=1e-6):
+    """qk-norm: normalize the last (head) dim; w is (dh,)."""
+    return rms_norm(x, w, eps)
+
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dh: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (np.arange(0, dh, 2) / dh))  # (dh/2,)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, sections, theta: float = 10000.0):
+    """Qwen2-VL M-RoPE: positions (B, S, 3) = (t, h, w); `sections` gives the
+    per-component share of the dh/2 frequency slots (sum == dh/2)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)  # (dh/2,)
+    total = float(sum(sections))
+    # map each of the dh/2 frequency slots to a position component by the
+    # sections' proportional shares (exact when sum(sections) == dh/2, and
+    # scale-invariant for reduced smoke configs)
+    comp = np.searchsorted(np.cumsum(sections) / total,
+                           (np.arange(dh // 2) + 0.5) / (dh // 2))
+    idx = jnp.broadcast_to(jnp.asarray(comp, jnp.int32)[None, None, :],
+                           positions.shape[:2] + (dh // 2,))
+    pos = jnp.take_along_axis(positions.astype(jnp.float32), idx, axis=-1)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, labels, mask=None):
+    """logits: (B, S, V) possibly vocab-sharded; labels: (B, S) int32.
+    fp32 logsumexp; XLA inserts the vocab-axis psum under GSPMD."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+def with_spec(x, spec: P, mesh=None):
+    """Sharding constraint that degrades to a no-op when no mesh is given
+    (CPU smoke tests run un-meshed; dry-run passes the production mesh)."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

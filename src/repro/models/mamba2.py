@@ -1,0 +1,157 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)-state
+recurrence for decode (why zamba2 runs the 524k-token long_500k shape).
+
+State per head: (P, N) with P = headdim, N = d_state.  Chunked algorithm
+(Dao & Gu 2024): within-chunk attention-like masked matmul with cumulative
+log-decay, cross-chunk state carried by a lax.scan.  n_groups = 1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import dense, rms_norm
+
+
+def init_mamba2(key, cfg, rules):
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    H = Di // cfg.ssm_headdim
+    N = cfg.ssm_state
+    conv_dim = Di + 2 * N
+    ks = jax.random.split(key, 5)
+    p, s = {}, {}
+    # in_proj -> [z, x, B, C, dt]
+    p["w_in"], s["w_in"] = dense(ks[0], D, 2 * Di + 2 * N + H,
+                                 rules.dense_in(D, 2 * Di + 2 * N + H))
+    p["w_out"], s["w_out"] = dense(ks[1], Di, D, rules.dense_out(Di, D))
+    p["conv_w"] = (jax.random.normal(ks[2], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.2).astype(jnp.bfloat16)
+    s["conv_w"] = P(None, None)
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32))
+    s["A_log"] = rules.vector()
+    p["dt_bias"] = jnp.zeros(H, jnp.float32)
+    s["dt_bias"] = rules.vector()
+    p["D_skip"] = jnp.ones(H, jnp.float32)
+    s["D_skip"] = rules.vector()
+    p["norm_w"] = jnp.ones(Di, jnp.bfloat16)
+    s["norm_w"] = rules.vector()
+    return p, s
+
+
+def _causal_conv(u, w):
+    """u: (B, S, C); w: (W, C) depthwise causal conv via tap shifts."""
+    W = w.shape[0]
+    out = u * w[-1]
+    for t in range(1, W):
+        shifted = jnp.pad(u, ((0, 0), (t, 0), (0, 0)))[:, :u.shape[1]]
+        out = out + shifted * w[W - 1 - t]
+    return out
+
+
+def _split_proj(p, cfg, xin):
+    D = cfg.d_model
+    Di = cfg.ssm_expand * D
+    H = Di // cfg.ssm_headdim
+    N = cfg.ssm_state
+    zxbcdt = xin @ p["w_in"]
+    z, xc, Bc, Cc, dt = jnp.split(
+        zxbcdt, [Di, 2 * Di, 2 * Di + N, 2 * Di + 2 * N], axis=-1)
+    return z, xc, Bc, Cc, dt, Di, H, N
+
+
+def mamba2_forward(p, cfg, xin, chunk: int = 256):
+    """xin: (B, S, D) -> (B, S, D).  Training / prefill path."""
+    B, S, D = xin.shape
+    z, xc, Bc, Cc, dt, Di, H, N = _split_proj(p, cfg, xin)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, p["conv_w"]))
+    xc, Bc, Cc = jnp.split(conv, [Di, Di + N], axis=-1)
+    Pd = cfg.ssm_headdim
+    xh = xc.reshape(B, S, H, Pd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    la = dt * A                                                   # log decay
+    xdt = xh * dt[..., None]
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    lac = la.reshape(B, nc, chunk, H)
+    F = jnp.cumsum(lac, axis=2)                                   # (B,nc,L,H)
+    xdtc = xdt.reshape(B, nc, chunk, H, Pd)
+    Bcc = Bf.reshape(B, nc, chunk, N)
+    Ccc = Cf.reshape(B, nc, chunk, N)
+
+    # ---- intra-chunk: M[t,s] = (C_t·B_s) exp(F_t - F_s), s <= t ----------
+    cb = jnp.einsum("bntj,bnsj->bnts", Ccc, Bcc)
+    dec = F[:, :, :, None, :] - F[:, :, None, :, :]               # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: exp(+big) under a where still poisons gradients
+    dec = jnp.where(tri[None, None, :, :, None], dec, -1e30)
+    w = jnp.exp(dec)
+    y_intra = jnp.einsum("bnts,bntsh,bnshp->bnthp", cb, w, xdtc)
+
+    # ---- chunk states: S_c = sum_s exp(F_L - F_s) B_s (x dt)_s -----------
+    wS = jnp.exp(F[:, :, -1:, :] - F)                             # (B,nc,L,H)
+    S_chunk = jnp.einsum("bnsj,bnsh,bnshp->bnhjp", Bcc, wS, xdtc)  # (B,nc,H,N,P)
+
+    # ---- inter-chunk scan --------------------------------------------------
+    decay_chunk = jnp.exp(F[:, :, -1, :])                         # (B,nc,H)
+
+    def scan_fn(Sprev, xs):
+        dchunk, Snew = xs
+        Sout = Sprev * dchunk[..., None, None] + Snew
+        return Sout, Sprev
+
+    S0 = jnp.zeros((B, H, N, Pd), jnp.float32)
+    _, S_before = jax.lax.scan(
+        scan_fn, S0, (jnp.moveaxis(decay_chunk, 1, 0),
+                      jnp.moveaxis(S_chunk, 1, 0)))
+    S_before = jnp.moveaxis(S_before, 0, 1)                       # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bntj,bnth,bnhjp->bnthp", Ccc, jnp.exp(F), S_before)
+
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    y = y + xh * p["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, Di).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["w_out"]
+
+
+def mamba2_init_state(cfg, batch):
+    Di = cfg.ssm_expand * cfg.d_model
+    H = Di // cfg.ssm_headdim
+    N = cfg.ssm_state
+    conv_dim = Di + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, N, cfg.ssm_headdim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.bfloat16),
+    }
+
+
+def mamba2_decode_step(p, cfg, xin, state):
+    """xin: (B, 1, D); state: {'ssm': (B,H,N,P), 'conv': (B,W-1,C)}."""
+    B = xin.shape[0]
+    z, xc, Bc, Cc, dt, Di, H, N = _split_proj(p, cfg, xin)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)             # (B,1,C)
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)   # (B,W,C)
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                                  p["conv_w"].astype(jnp.float32)))[:, None]
+    new_conv = window[:, 1:]
+    xc, Bc, Cc = jnp.split(conv.astype(xin.dtype), [Di, Di + N], axis=-1)
+    Pd = cfg.ssm_headdim
+    xh = xc.reshape(B, H, Pd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    alpha = jnp.exp(dt * A)                                      # (B,H)
+    Bf = Bc[:, 0].astype(jnp.float32)                            # (B,N)
+    Cf = Cc[:, 0].astype(jnp.float32)
+    S = state["ssm"] * alpha[..., None, None] + jnp.einsum(
+        "bj,bhp->bhjp", Bf, xh * dt[..., None])
+    y = jnp.einsum("bj,bhjp->bhp", Cf, S) + xh * p["D_skip"][None, :, None]
+    y = y.reshape(B, 1, Di).astype(xin.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["w_out"], {"ssm": S, "conv": new_conv}

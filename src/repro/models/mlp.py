@@ -1,0 +1,30 @@
+"""Dense MLP variants: SwiGLU (llama-family), plain GELU (granite-code),
+squared-ReLU (nemotron/minitron)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTS, dense
+
+
+def init_mlp(key, cfg, rules):
+    D, F = cfg.d_model, cfg.d_ff
+    p, s = {}, {}
+    if cfg.mlp_kind == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        p["w_gate"], s["w_gate"] = dense(k1, D, F, rules.dense_in(D, F))
+        p["w_up"], s["w_up"] = dense(k2, D, F, rules.dense_in(D, F))
+        p["w_down"], s["w_down"] = dense(k3, F, D, rules.dense_out(F, D))
+    else:
+        k1, k2 = jax.random.split(key, 2)
+        p["w_in"], s["w_in"] = dense(k1, D, F, rules.dense_in(D, F))
+        p["w_out"], s["w_out"] = dense(k2, F, D, rules.dense_out(F, D))
+    return p, s
+
+
+def mlp(p, cfg, x):
+    if cfg.mlp_kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    act = ACTS[cfg.mlp_kind]
+    return act(x @ p["w_in"]) @ p["w_out"]

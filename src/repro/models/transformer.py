@@ -1,0 +1,443 @@
+"""Model composition for every assigned family: dense / MoE / VLM decoder
+stacks, xLSTM stacks, zamba2 hybrid (mamba2 + shared attention), enc-dec.
+
+Homogeneous stacks use ``lax.scan`` over stacked layer params (compact HLO
+for 88-layer models) with configurable remat; heterogeneous stacks (xlstm's
+12 mixed layers) unroll.  All apply fns are pure; sharding enters via the
+spec trees produced at init and ``with_spec`` constraints.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .attention import (attn_kv_only, attn_q_only, attn_qkv,
+                        attention_layer, blocked_attention, decode_attention,
+                        init_attention)
+from .common import dense, rms_norm, softmax_xent, stack_init, with_spec
+from .mamba2 import (init_mamba2, mamba2_decode_step, mamba2_forward,
+                     mamba2_init_state)
+from .mlp import init_mlp, mlp
+from .moe import init_moe, moe_apply, moe_ffn
+from .xlstm import (init_mlstm_block, init_slstm_block, mlstm_block,
+                    mlstm_block_decode, mlstm_block_init_state, slstm_block,
+                    slstm_block_decode, slstm_init_state)
+
+# ---------------------------------------------------------------------------
+# remat
+# ---------------------------------------------------------------------------
+
+
+def _wrap_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "full": save only layer boundaries
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_dense_block(key, cfg, rules, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = jnp.ones(cfg.d_model, jnp.bfloat16), rules.vector()
+    p["attn"], s["attn"] = init_attention(ks[0], cfg, rules)
+    if cross:
+        p["ln_x"], s["ln_x"] = jnp.ones(cfg.d_model, jnp.bfloat16), rules.vector()
+        p["xattn"], s["xattn"] = init_attention(ks[1], cfg, rules)
+    p["ln2"], s["ln2"] = jnp.ones(cfg.d_model, jnp.bfloat16), rules.vector()
+    if cfg.family == "moe" and not cross:
+        p["moe"], s["moe"] = init_moe(ks[2], cfg, rules)
+    else:
+        p["mlp"], s["mlp"] = init_mlp(ks[3], cfg, rules)
+    return p, s
+
+
+def init_model(key, cfg, rules):
+    keys = jax.random.split(key, 8)
+    Vp, D = cfg.vocab_padded, cfg.d_model
+    p, s = {}, {}
+    p["embed"], s["embed"] = dense(keys[0], Vp, D, rules.embed(Vp, D),
+                                   scale=0.02)
+    p["final_norm"], s["final_norm"] = jnp.ones(D, jnp.bfloat16), rules.vector()
+    if not cfg.tie_embeddings:
+        p["head"], s["head"] = dense(keys[1], D, Vp,
+                                     rules.dense_in(D, Vp), scale=0.02)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        p["blocks"], s["blocks"] = stack_init(
+            lambda k: _init_dense_block(k, cfg, rules), keys[2], cfg.n_layers)
+    elif fam == "ssm":  # xlstm: heterogeneous, unrolled
+        layers_p, layers_s = {}, {}
+        lk = jax.random.split(keys[2], cfg.n_layers)
+        for i in range(cfg.n_layers):
+            kind = "s" if i in cfg.slstm_layers else "m"
+            init = init_slstm_block if kind == "s" else init_mlstm_block
+            bp, bs = init(lk[i], cfg, rules)
+            bp["ln"], bs["ln"] = jnp.ones(D, jnp.bfloat16), rules.vector()
+            layers_p[f"l{i}{kind}"] = bp
+            layers_s[f"l{i}{kind}"] = bs
+        p["layers"], s["layers"] = layers_p, layers_s
+    elif fam == "hybrid":  # zamba2
+        def mb(k):
+            bp, bs = init_mamba2(k, cfg, rules)
+            bp["ln"], bs["ln"] = jnp.ones(D, jnp.bfloat16), rules.vector()
+            return bp, bs
+        p["mamba"], s["mamba"] = stack_init(mb, keys[2], cfg.n_layers)
+        p["shared_attn"], s["shared_attn"] = _init_dense_block(
+            keys[3], dataclasses_replace_family(cfg), rules)
+    elif fam == "encdec":
+        p["enc_blocks"], s["enc_blocks"] = stack_init(
+            lambda k: _init_dense_block(k, cfg, rules), keys[2], cfg.enc_layers)
+        p["dec_blocks"], s["dec_blocks"] = stack_init(
+            lambda k: _init_dense_block(k, cfg, rules, cross=True),
+            keys[3], cfg.n_layers)
+        p["enc_norm"], s["enc_norm"] = jnp.ones(D, jnp.bfloat16), rules.vector()
+    else:
+        raise ValueError(fam)
+    return p, s
+
+
+def dataclasses_replace_family(cfg):
+    """zamba2's shared block is a plain dense attn+mlp block."""
+    import dataclasses
+    return dataclasses.replace(cfg, family="dense")
+
+
+# ---------------------------------------------------------------------------
+# block apply fns
+# ---------------------------------------------------------------------------
+
+
+def _dense_block(lp, cfg, h, positions, *, causal=True, backend="xla",
+                 enc_kv=None, want_kv=False, mesh=None, rules=None):
+    attn_out = attention_layer(lp["attn"], cfg, rms_norm(h, lp["ln1"]),
+                               positions, causal=causal, backend=backend,
+                               return_kv=want_kv)
+    kv = ()
+    if want_kv:
+        attn_out, kv = attn_out
+    h = h + attn_out
+    if enc_kv is not None:
+        h = h + attention_layer(lp["xattn"], cfg, rms_norm(h, lp["ln_x"]),
+                                positions, kv_override=enc_kv, backend=backend)
+    aux = jnp.float32(0)
+    hn = rms_norm(h, lp["ln2"])
+    if "moe" in lp:
+        y, aux = moe_apply(lp["moe"], cfg, hn, mesh=mesh, rules=rules)
+        h = h + y
+    else:
+        h = h + mlp(lp["mlp"], cfg, hn)
+    return h, aux, kv
+
+
+def _positions_1d(B, S):
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg, batch, rules=None, mesh=None, *, backend="xla",
+            want_cache=False):
+    """batch: tokens (B,S) [+ positions / image_embeds / enc_embeds].
+    Returns (logits, aux_dict, caches | None)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    D = cfg.d_model
+    h = jnp.asarray(params["embed"][tokens], jnp.bfloat16)
+    positions = batch.get("positions", _positions_1d(B, S))
+    if cfg.family == "vlm":
+        img = batch["image_embeds"].astype(h.dtype)
+        h = jnp.concatenate([img, h[:, cfg.n_image_tokens:]], axis=1)
+    if rules is not None and mesh is not None:
+        h = with_spec(h, rules.act_hidden(B), mesh)
+
+    aux = {"moe_drop_frac": jnp.float32(0)}
+    caches = {}
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def blk(hh, lp):
+            out, a, kv = _dense_block(lp, cfg, hh, positions, backend=backend,
+                                      want_kv=want_cache, mesh=mesh,
+                                      rules=rules)
+            return out, (a, kv)
+        blk_r = _wrap_remat(blk, cfg.remat)
+        h, (auxs, kvs) = jax.lax.scan(blk_r, h, params["blocks"])
+        aux["moe_drop_frac"] = jnp.mean(auxs)
+        if want_cache:
+            caches["k"], caches["v"] = kvs  # (L, B, KH, S, dh)
+    elif fam == "ssm":
+        states = {}
+        for name, lp in params["layers"].items():
+            hn = rms_norm(h, lp["ln"])
+            if name.endswith("s"):
+                h = h + slstm_block(lp, cfg, hn)
+            else:
+                h = h + mlstm_block(lp, cfg, hn)
+        # (decode states built separately by init_decode_state)
+    elif fam == "hybrid":
+        period = cfg.attn_every
+        L = cfg.n_layers
+        n_groups = L // period
+        stacked = params["mamba"]
+        grouped = jax.tree.map(
+            lambda x: x[:n_groups * period].reshape(
+                (n_groups, period) + x.shape[1:]), stacked)
+        tail = jax.tree.map(lambda x: x[n_groups * period:], stacked)
+
+        def mblk(hh, lp):
+            return hh + mamba2_forward(lp, cfg, rms_norm(hh, lp["ln"])), None
+        mblk_r = _wrap_remat(mblk, cfg.remat)
+
+        shared_kvs = []
+        for gi in range(n_groups):
+            grp = jax.tree.map(lambda x, gi=gi: x[gi], grouped)
+            h, _ = jax.lax.scan(mblk_r, h, grp)
+            h, _, kv = _dense_block(params["shared_attn"], cfg, h, positions,
+                                    backend=backend, want_kv=want_cache)
+            if want_cache:
+                shared_kvs.append(kv)
+        if L - n_groups * period:
+            h, _ = jax.lax.scan(mblk_r, h, tail)
+        if want_cache:
+            caches["k"] = jnp.stack([kv[0] for kv in shared_kvs])
+            caches["v"] = jnp.stack([kv[1] for kv in shared_kvs])
+    elif fam == "encdec":
+        enc_h = batch["enc_embeds"].astype(h.dtype)
+        Se = enc_h.shape[1]
+        enc_pos = _positions_1d(B, Se)
+
+        def eblk(hh, lp):
+            out, a, _ = _dense_block(lp, cfg, hh, enc_pos, causal=False,
+                                     backend=backend)
+            return out, a
+        enc_h, _ = jax.lax.scan(_wrap_remat(eblk, cfg.remat), enc_h,
+                                params["enc_blocks"])
+        enc_h = rms_norm(enc_h, params["enc_norm"])
+
+        def dblk(hh, lp):
+            ek, ev = attn_kv_only(lp["xattn"], cfg, enc_h)
+            out, a, kv = _dense_block(lp, cfg, hh, positions, backend=backend,
+                                      enc_kv=(ek, ev), want_kv=want_cache)
+            xkv = ()
+            if want_cache:
+                xkv = (ek.transpose(0, 2, 1, 3), ev.transpose(0, 2, 1, 3))
+            return out, (a, kv, xkv)
+        h, (auxs, kvs, xkvs) = jax.lax.scan(_wrap_remat(dblk, cfg.remat), h,
+                                            params["dec_blocks"])
+        if want_cache:
+            caches["k"], caches["v"] = kvs
+            caches["cross_k"], caches["cross_v"] = xkvs
+    else:
+        raise ValueError(fam)
+
+    h = rms_norm(h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = h @ head
+    if rules is not None and mesh is not None:
+        logits = with_spec(logits, rules.act_logits(B, cfg.vocab_padded), mesh)
+    return logits, aux, (caches if want_cache else None)
+
+
+def lm_loss(params, cfg, batch, rules=None, mesh=None, *, backend="xla"):
+    logits, aux, _ = forward(params, cfg, batch, rules, mesh, backend=backend)
+    tokens = batch["tokens"]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+    if cfg.family == "vlm":  # image prefix carries no LM loss
+        mask = mask.at[:, :cfg.n_image_tokens].set(0.0)
+    return softmax_xent(logits, labels, mask), aux
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against a pre-sized state)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg, seq_len: int, batch: int):
+    """Concrete zero state (tests / real serving).  Mirrors state_specs."""
+    KH, dh = cfg.n_kv_heads, cfg.head_dim
+    bf16 = jnp.bfloat16
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        shape = (cfg.n_layers, batch, KH, seq_len, dh)
+        return {"k": jnp.zeros(shape, bf16), "v": jnp.zeros(shape, bf16)}
+    if fam == "ssm":
+        st = {}
+        for i in range(cfg.n_layers):
+            if i in cfg.slstm_layers:
+                st[f"l{i}s"] = slstm_init_state(cfg, batch)
+            else:
+                st[f"l{i}m"] = mlstm_block_init_state(cfg, batch)
+        return st
+    if fam == "hybrid":
+        n_apps = cfg.n_layers // cfg.attn_every
+        per = mamba2_init_state(cfg, batch)
+        st = {"mamba": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape),
+            per)}
+        st["k"] = jnp.zeros((n_apps, batch, KH, seq_len, dh), bf16)
+        st["v"] = jnp.zeros((n_apps, batch, KH, seq_len, dh), bf16)
+        return st
+    if fam == "encdec":
+        Se = seq_len // cfg.enc_seq_div
+        L = cfg.n_layers
+        return {
+            "k": jnp.zeros((L, batch, KH, seq_len, dh), bf16),
+            "v": jnp.zeros((L, batch, KH, seq_len, dh), bf16),
+            "cross_k": jnp.zeros((L, batch, KH, Se, dh), bf16),
+            "cross_v": jnp.zeros((L, batch, KH, Se, dh), bf16),
+        }
+    raise ValueError(fam)
+
+
+def decode_state_specs(cfg, seq_len: int, batch: int, rules):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the dry-run."""
+    state = jax.eval_shape(lambda: init_decode_state(cfg, seq_len, batch))
+    kv_spec = rules.kv_cache(batch, cfg.n_kv_heads)
+    kv_spec_l = P(None, *kv_spec)
+
+    mamba_heads = (cfg.ssm_expand * cfg.d_model // cfg.ssm_headdim
+                   if cfg.ssm_headdim else 0)
+
+    def spec_of(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        if any(n in ("k", "v", "cross_k", "cross_v") for n in names):
+            return kv_spec_l
+        if "ssm" in names:  # (L, B, H, N, P)
+            return P(None, *rules.ssm_state(batch, mamba_heads))
+        if "conv" in names and "mamba" in names:
+            return P(None, rules.batch_ax(batch), None, None)
+        if "C" in names:    # mLSTM matrix memory (B, H, dk, dv+1)
+            dk = 2 * cfg.d_model // cfg.n_heads
+            return P(*rules.mlstm_state(batch, cfg.n_heads, dk))
+        if "conv" in names:
+            return P(rules.batch_ax(batch), None, None)
+        if leaf.ndim >= 1:
+            return P(rules.batch_ax(batch), *([None] * (leaf.ndim - 1)))
+        return P()
+
+    specs = jax.tree_util.tree_map_with_path(spec_of, state)
+    return state, specs
+
+
+def decode_step(params, cfg, batch, state, rules=None, mesh=None):
+    """One decode step.  batch: tokens (B,1), cur_len scalar int32 (number of
+    already-cached positions; the new token is written at index cur_len).
+    Returns (logits (B,1,Vp), new_state)."""
+    tokens = batch["tokens"]
+    cur = batch["cur_len"]
+    B = tokens.shape[0]
+    h = jnp.asarray(params["embed"][tokens], jnp.bfloat16)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.asarray(cur, jnp.int32)[None, None], (B, 1))
+    fam = cfg.family
+    new_state = dict(state)
+
+    def attn_decode(lp, hh, kc, vc):
+        hn = rms_norm(hh, lp["ln1"])
+        q, k, v = attn_qkv(lp["attn"], cfg, hn, positions)
+        kc = jax.lax.dynamic_update_slice(
+            kc, k.transpose(0, 2, 1, 3).astype(kc.dtype), (0, 0, cur, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v.transpose(0, 2, 1, 3).astype(vc.dtype), (0, 0, cur, 0))
+        o = decode_attention(q, kc, vc, cur + 1, window=cfg.window)
+        return hh + o.reshape(B, 1, -1) @ lp["attn"]["wo"], kc, vc
+
+    def ffn_decode(lp, hh):
+        hn = rms_norm(hh, lp["ln2"])
+        if "moe" in lp:
+            y, _ = moe_apply(lp["moe"], cfg, hn, mesh=mesh, rules=rules)
+            return hh + y
+        return hh + mlp(lp["mlp"], cfg, hn)
+
+    if fam in ("dense", "moe", "vlm"):
+        def blk(hh, xs):
+            lp, kc, vc = xs
+            hh, kc, vc = attn_decode(lp, hh, kc, vc)
+            hh = ffn_decode(lp, hh)
+            return hh, (kc, vc)
+        h, (knew, vnew) = jax.lax.scan(blk, h,
+                                       (params["blocks"], state["k"], state["v"]))
+        new_state = {"k": knew, "v": vnew}
+    elif fam == "ssm":
+        for name, lp in params["layers"].items():
+            hn = rms_norm(h, lp["ln"])
+            if name.endswith("s"):
+                y, st = slstm_block_decode(lp, cfg, hn, state[name])
+            else:
+                y, st = mlstm_block_decode(lp, cfg, hn, state[name])
+            h = h + y
+            new_state[name] = st
+        new_state = dict(new_state)
+    elif fam == "hybrid":
+        period = cfg.attn_every
+        L = cfg.n_layers
+        n_groups = L // period
+
+        def mdec(hh, xs):
+            lp, st = xs
+            y, st2 = mamba2_decode_step(lp, cfg, rms_norm(hh, lp["ln"]), st)
+            return hh + y, st2
+
+        mstack = params["mamba"]
+        sstack = state["mamba"]
+        new_m = []
+        knew = []
+        vnew = []
+        for gi in range(n_groups):
+            sl = slice(gi * period, (gi + 1) * period)
+            grp = jax.tree.map(lambda x: x[sl], mstack)
+            sgrp = jax.tree.map(lambda x: x[sl], sstack)
+            h, s2 = jax.lax.scan(mdec, h, (grp, sgrp))
+            new_m.append(s2)
+            lp = params["shared_attn"]
+            h, kc, vc = attn_decode(lp, h, state["k"][gi], state["v"][gi])
+            h = ffn_decode(lp, h)
+            knew.append(kc)
+            vnew.append(vc)
+        if L - n_groups * period:
+            sl = slice(n_groups * period, L)
+            grp = jax.tree.map(lambda x: x[sl], mstack)
+            sgrp = jax.tree.map(lambda x: x[sl], sstack)
+            h, s2 = jax.lax.scan(mdec, h, (grp, sgrp))
+            new_m.append(s2)
+        new_state = {"mamba": jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_m),
+            "k": jnp.stack(knew), "v": jnp.stack(vnew)}
+    elif fam == "encdec":
+        def blk(hh, xs):
+            lp, kc, vc, xk, xv = xs
+            hh, kc, vc = attn_decode(lp, hh, kc, vc)
+            q = attn_q_only(lp["xattn"], cfg, rms_norm(hh, lp["ln_x"]))
+            o = decode_attention(q, xk, xv, xk.shape[2])
+            hh = hh + o.reshape(B, 1, -1) @ lp["xattn"]["wo"]
+            hh = ffn_decode(lp, hh)
+            return hh, (kc, vc)
+        h, (knew, vnew) = jax.lax.scan(
+            blk, h, (params["dec_blocks"], state["k"], state["v"],
+                     state["cross_k"], state["cross_v"]))
+        new_state = {"k": knew, "v": vnew,
+                     "cross_k": state["cross_k"], "cross_v": state["cross_v"]}
+    else:
+        raise ValueError(fam)
+
+    h = rms_norm(h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return h @ head, new_state

@@ -1,0 +1,263 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar
+memory), for the xlstm-125m architecture.
+
+mLSTM trains with an exact chunkwise-parallel form (TFLA-style):  within a
+chunk, weights W[t,s] = exp(F_t − F_s + ĩ_s) are computed in log space with a
+per-row stabilizer mx_t = max(cummax_s≤t(ĩ_s − F_s), M_prev); the carried
+state is (S̃, M) with true state S̃·exp(M).  The normalizer n is carried as an
+augmented value column, and the output h = (C q)/max(|n·q|, exp(−a)) is
+stabilizer-exact because numerator and denominator share the same scale.
+Decode is the O(1) per-step stabilized recurrence (tested against the
+chunked form).  sLSTM is a per-step lax.scan (tiny model; fine).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import dense, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def mlstm_chunked(q, k, v, i_pre, logf, chunk: int = 256):
+    """q/k/v: (B, S, H, dh) f32; i_pre/logf: (B, S, H) f32.
+    Returns h: (B, S, H, dh)."""
+    B, S, H, dh = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    qc = q.reshape(B, nc, chunk, H, dh)
+    kc = k.reshape(B, nc, chunk, H, dh) * (dh ** -0.5)
+    vc = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    vc = vc.reshape(B, nc, chunk, H, dh + 1)
+    ic = i_pre.reshape(B, nc, chunk, H)
+    fc = logf.reshape(B, nc, chunk, H)
+
+    F = jnp.cumsum(fc, axis=2)                    # (B,nc,L,H) inclusive
+    g = ic - F                                    # ĩ_s − F_s
+    cmax = jax.lax.cummax(g, axis=2)
+
+    def chunk_step(carry, xs):
+        Sm, M = carry                             # (B,H,dh,dh+1), (B,H)
+        qb, kb, vb, Fb, gb, cmb = xs              # (B,L,H,*), (B,L,H)
+        mx = jnp.maximum(cmb, M[:, None, :])      # (B,L,H)
+        # intra: W[t,s] = exp(g_s − mx_t), s<=t
+        L = qb.shape[1]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        expo = jnp.where(tri[None, :, :, None],
+                         gb[:, None, :, :] - mx[:, :, None, :], -1e30)
+        Wts = jnp.exp(expo)
+        qkT = jnp.einsum("bthd,bshd->btsh", qb, kb)
+        num = jnp.einsum("btsh,btsh,bshe->bthe", qkT, Wts, vb)
+        # inter: exp(M − mx_t) · q_t S
+        cI = jnp.exp(M[:, None, :] - mx)          # (B,L,H)
+        num = num + jnp.einsum("bthd,bhde,bth->bthe", qb, Sm, cI)
+        hv, hn = num[..., :dh], num[..., dh]
+        denom = jnp.maximum(jnp.abs(hn), jnp.exp(-(Fb + mx)))
+        h = hv / denom[..., None]
+        # carry update
+        mxL = jnp.maximum(cmax_last := cmb[:, -1, :], M)
+        Snew = (jnp.exp(M - mxL)[:, :, None, None] * Sm
+                + jnp.einsum("bshd,bsh,bshe->bhde", kb,
+                             jnp.exp(gb - mxL[:, None, :]), vb))
+        Mnew = Fb[:, -1, :] + mxL
+        return (Snew, Mnew), h
+
+    S0 = jnp.zeros((B, H, dh, dh + 1), jnp.float32)
+    M0 = jnp.full((B, H), -1e30, jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, F, g, cmax))
+    (_, _), hs = jax.lax.scan(chunk_step, (S0, M0), xs)
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, H, dh)
+
+
+def mlstm_decode_step(state, q, k, v, i_pre, logf):
+    """state: {'C': (B,H,dh,dh+1), 'm': (B,H)}; q/k/v: (B,H,dh)."""
+    C, m = state["C"], state["m"]
+    dh = q.shape[-1]
+    k = k * (dh ** -0.5)
+    v1 = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    m_new = jnp.maximum(logf + m, i_pre)
+    C = (jnp.exp(logf + m - m_new)[..., None, None] * C
+         + jnp.exp(i_pre - m_new)[..., None, None]
+         * k[..., :, None] * v1[..., None, :])
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    hv, hn = num[..., :dh], num[..., dh]
+    h = hv / jnp.maximum(jnp.abs(hn), jnp.exp(-m_new))[..., None]
+    return {"C": C, "m": m_new}, h
+
+
+def mlstm_reference(q, k, v, i_pre, logf):
+    """Per-step oracle for tests."""
+    B, S, H, dh = q.shape
+    state = {"C": jnp.zeros((B, H, dh, dh + 1), jnp.float32),
+             "m": jnp.full((B, H), -1e30, jnp.float32)}
+
+    def step(st, xs):
+        qt, kt, vt, it, ft = xs
+        st, h = mlstm_decode_step(st, qt, kt, vt, it, ft)
+        return st, h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_pre, logf))
+    _, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (params + apply)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(key, cfg, rules):
+    D = cfg.d_model
+    Di = 2 * D
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    p, s = {}, {}
+    p["w_up"], s["w_up"] = dense(ks[0], D, 2 * Di, rules.dense_in(D, 2 * Di))
+    p["conv_w"] = (jax.random.normal(ks[1], (4, Di), jnp.float32) * 0.2
+                   ).astype(jnp.bfloat16)
+    s["conv_w"] = P(None, None)
+    p["w_q"], s["w_q"] = dense(ks[2], Di, Di, rules.dense_in(Di, Di))
+    p["w_k"], s["w_k"] = dense(ks[3], Di, Di, rules.dense_in(Di, Di))
+    p["w_v"], s["w_v"] = dense(ks[4], Di, Di, rules.dense_in(Di, Di))
+    p["w_if"], s["w_if"] = dense(ks[5], Di, 2 * H, rules.dense_in(Di, 2 * H))
+    p["norm_w"] = jnp.ones(Di, jnp.bfloat16)
+    s["norm_w"] = rules.vector()
+    p["w_down"], s["w_down"] = dense(ks[6], Di, D, rules.dense_out(Di, D))
+    return p, s
+
+
+def _mlstm_block_pre(p, cfg, x):
+    from .mamba2 import _causal_conv  # same depthwise causal conv
+    B, S, D = x.shape
+    Di, H = 2 * D, cfg.n_heads
+    dh = Di // H
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    xconv = jax.nn.silu(_causal_conv(xm, p["conv_w"]))
+    q = (xconv @ p["w_q"]).reshape(B, S, H, dh).astype(jnp.float32)
+    k = (xconv @ p["w_k"]).reshape(B, S, H, dh).astype(jnp.float32)
+    v = (xm @ p["w_v"]).reshape(B, S, H, dh).astype(jnp.float32)
+    gates = (xconv @ p["w_if"]).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gates.reshape(B, S, 2, H), 2, axis=2)
+    i_pre = i_pre[:, :, 0]
+    logf = -jax.nn.softplus(-f_pre[:, :, 0])  # log sigmoid
+    return q, k, v, i_pre, logf, z, (Di, H, dh)
+
+
+def mlstm_block(p, cfg, x, chunk: int = 256):
+    B, S, D = x.shape
+    q, k, v, i_pre, logf, z, (Di, H, dh) = _mlstm_block_pre(p, cfg, x)
+    h = mlstm_chunked(q, k, v, i_pre, logf, chunk=chunk)
+    h = h.reshape(B, S, Di).astype(x.dtype)
+    h = rms_norm(h, p["norm_w"]) * jax.nn.silu(z)
+    return h @ p["w_down"]
+
+
+def mlstm_block_init_state(cfg, batch):
+    D = cfg.d_model
+    Di, H = 2 * D, cfg.n_heads
+    dh = Di // H
+    return {"C": jnp.zeros((batch, H, dh, dh + 1), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, 3, Di), jnp.bfloat16)}
+
+
+def mlstm_block_decode(p, cfg, x, state):
+    """x: (B, 1, D)."""
+    B, _, D = x.shape
+    Di, H = 2 * D, cfg.n_heads
+    dh = Di // H
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    window = jnp.concatenate([state["conv"], xm], axis=1)  # (B,4,Di)
+    xconv = jax.nn.silu(jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                                   p["conv_w"].astype(jnp.float32)))
+    xconv = xconv.astype(x.dtype)[:, None]
+    q = (xconv @ p["w_q"]).reshape(B, H, dh).astype(jnp.float32)
+    k = (xconv @ p["w_k"]).reshape(B, H, dh).astype(jnp.float32)
+    v = (xm @ p["w_v"]).reshape(B, H, dh).astype(jnp.float32)
+    gates = (xconv @ p["w_if"]).astype(jnp.float32).reshape(B, 2, H)
+    i_pre = gates[:, 0]
+    logf = -jax.nn.softplus(-gates[:, 1])
+    cell = {"C": state["C"], "m": state["m"]}
+    cell, h = mlstm_decode_step(cell, q, k, v, i_pre, logf)
+    h = h.reshape(B, 1, Di).astype(x.dtype)
+    h = rms_norm(h, p["norm_w"]) * jax.nn.silu(z)
+    return h @ p["w_down"], {"C": cell["C"], "m": cell["m"],
+                             "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_slstm_block(key, cfg, rules):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["w_gates"], s["w_gates"] = dense(ks[0], D, 4 * D, rules.dense_in(D, 4 * D))
+    p["r_gates"] = (jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32)
+                    * dh ** -0.5).astype(jnp.bfloat16)
+    s["r_gates"] = P(None, None, None)
+    p["w_out"], s["w_out"] = dense(ks[2], D, D, rules.dense_out(D, D))
+    p["norm_w"] = jnp.ones(D, jnp.bfloat16)
+    s["norm_w"] = rules.vector()
+    return p, s
+
+
+def slstm_step(p, cfg, gates_x, state):
+    """gates_x: (B, 4D) precomputed Wx part; state: dict of (B,H,dh)."""
+    B = gates_x.shape[0]
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    rec = jnp.einsum("bhd,hde->bhe", state["h"].astype(jnp.bfloat16),
+                     p["r_gates"]).astype(jnp.float32)  # (B,H,4dh)
+    gx = gates_x.reshape(B, H, 4 * dh).astype(jnp.float32) + rec
+    zt, it, ft, ot = jnp.split(gx, 4, axis=-1)
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    m_new = jnp.maximum(ft + state["m"], it)
+    i_h = jnp.exp(it - m_new)
+    f_h = jnp.exp(ft + state["m"] - m_new)
+    c = f_h * state["c"] + i_h * z
+    n = f_h * state["n"] + i_h
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "m": m_new, "h": h}, h
+
+
+def slstm_init_state(cfg, batch):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    zeros = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": zeros, "n": zeros, "m": jnp.full((batch, H, dh), -1e30),
+            "h": zeros}
+
+
+def slstm_block(p, cfg, x):
+    """x: (B, S, D) -> (B, S, D) via lax.scan over time."""
+    B, S, D = x.shape
+    gates_x = x @ p["w_gates"]                     # (B,S,4D)
+    state = slstm_init_state(cfg, B)
+
+    def step(st, gx):
+        return slstm_step(p, cfg, gx, st)
+
+    _, hs = jax.lax.scan(step, state, jnp.moveaxis(gates_x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    return rms_norm(h, p["norm_w"]) @ p["w_out"]
+
+
+def slstm_block_decode(p, cfg, x, state):
+    gates_x = (x[:, 0] @ p["w_gates"])
+    state, h = slstm_step(p, cfg, gates_x, state)
+    B = x.shape[0]
+    h = h.reshape(B, 1, cfg.d_model).astype(x.dtype)
+    return rms_norm(h, p["norm_w"]) @ p["w_out"], state

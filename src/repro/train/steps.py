@@ -1,0 +1,201 @@
+"""jit-compiled step factories with production-mesh shardings.
+
+``make_train_step``  — microbatched (lax.scan) grad accumulation, AdamW,
+                       donated params/opt state.
+``make_prefill_step`` — full forward returning logits + KV caches.
+``make_decode_step``  — one token against a pre-sized state, donated state.
+
+Each factory returns (jitted_fn, in_shardings, out_shardings) so the dry-run
+can .lower().compile() with ShapeDtypeStructs and the real launcher can call
+them with device arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..dist.sharding import ShardingRules
+from ..models.transformer import (decode_state_specs, decode_step, forward,
+                                  init_model, lm_loss)
+from ..optim.adamw import (AdamWConfig, adamw_update, init_opt_state,
+                           opt_state_specs)
+from ..optim.compress import compressed_psum_grads
+
+
+def make_rules(cfg: ArchConfig, mesh) -> ShardingRules:
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ShardingRules(model_size=shape.get("model", 1),
+                         data_size=shape.get("data", 1),
+                         fsdp=cfg.fsdp,
+                         multi_pod="pod" in shape)
+
+
+def bind_runtime(cfg: ArchConfig, mesh, batch: int) -> ArchConfig:
+    """Resolve mesh-dependent runtime fields (e.g. MoE token shards =
+    how many ways the batch is actually sharded)."""
+    rules = make_rules(cfg, mesh)
+    ax = rules.batch_ax(batch)
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shards = 1
+    if ax:
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            shards *= shape.get(a, 1)
+    return dataclasses.replace(cfg, moe_token_shards=shards)
+
+
+def param_and_opt_shardings(cfg: ArchConfig, mesh):
+    rules = make_rules(cfg, mesh)
+    specs = init_specs_only(cfg, rules)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                          is_leaf=lambda x: isinstance(x, P))
+    oshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          opt_state_specs(specs),
+                          is_leaf=lambda x: isinstance(x, P))
+    return pshard, oshard, specs, rules
+
+
+def init_specs_only(cfg: ArchConfig, rules: ShardingRules):
+    """Spec tree without materializing params (init under eval_shape)."""
+    out = {}
+
+    def capture():
+        p, s = init_model(jax.random.PRNGKey(0), cfg, rules)
+        out["specs"] = s
+        return p
+
+    jax.eval_shape(capture)
+    return out["specs"]
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                    opt_cfg: AdamWConfig = None, *, backend: str = "xla",
+                    grad_compression: bool = False, donate: bool = True):
+    opt_cfg = opt_cfg or AdamWConfig()
+    cfg = bind_runtime(cfg, mesh, shape.global_batch // max(1, cfg.microbatch))
+    pshard, oshard, specs, rules = param_and_opt_shardings(cfg, mesh)
+    B = shape.global_batch
+    mb = max(1, cfg.microbatch)
+    assert B % mb == 0
+    tok_shard = NamedSharding(mesh, rules.tokens(B))
+    batch_shardings = {"tokens": tok_shard}
+    if cfg.family == "vlm":
+        batch_shardings["positions"] = NamedSharding(
+            mesh, P(rules.batch_ax(B), None, None))
+        batch_shardings["image_embeds"] = NamedSharding(
+            mesh, P(rules.batch_ax(B), None, None))
+    if cfg.family == "encdec":
+        batch_shardings["enc_embeds"] = NamedSharding(
+            mesh, P(rules.batch_ax(B), None, None))
+
+    def train_step(params, opt_state, batch):
+        def mb_loss(p, mb_batch):
+            loss, aux = lm_loss(p, cfg, mb_batch, rules, mesh,
+                                backend=backend)
+            return loss, aux
+
+        if mb == 1:
+            (loss, aux), grads = jax.value_and_grad(mb_loss, has_aux=True)(
+                params, batch)
+        else:
+            split = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                batch)
+
+            def acc_fn(carry, mb_batch):
+                gsum, lsum = carry
+                (l, aux), g = jax.value_and_grad(mb_loss, has_aux=True)(
+                    params, mb_batch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), aux
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), auxs = jax.lax.scan(acc_fn, (g0, 0.0), split)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+            aux = jax.tree.map(lambda x: jnp.mean(x), auxs)
+
+        if grad_compression:
+            grads = compressed_psum_grads(grads, mesh, rules)
+        new_params, new_opt, stats = adamw_update(opt_cfg, grads, opt_state,
+                                                  params)
+        metrics = {"loss": loss, **stats,
+                   "moe_drop_frac": aux["moe_drop_frac"]}
+        return new_params, new_opt, metrics
+
+    in_shardings = (pshard, oshard, batch_shardings)
+    rep = NamedSharding(mesh, P())
+    out_shardings = (pshard, oshard,
+                     {"loss": rep, "grad_norm": rep, "lr": rep,
+                      "moe_drop_frac": rep})
+    fn = jax.jit(train_step, in_shardings=in_shardings,
+                 out_shardings=out_shardings,
+                 donate_argnums=(0, 1) if donate else ())
+    return fn, in_shardings, out_shardings, rules
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                      backend: str = "xla"):
+    cfg = bind_runtime(cfg, mesh, shape.global_batch)
+    pshard, _, specs, rules = param_and_opt_shardings(cfg, mesh)
+    B = shape.global_batch
+    batch_shardings = {"tokens": NamedSharding(mesh, rules.tokens(B))}
+    if cfg.family == "vlm":
+        batch_shardings["positions"] = NamedSharding(
+            mesh, P(rules.batch_ax(B), None, None))
+        batch_shardings["image_embeds"] = NamedSharding(
+            mesh, P(rules.batch_ax(B), None, None))
+    if cfg.family == "encdec":
+        batch_shardings["enc_embeds"] = NamedSharding(
+            mesh, P(rules.batch_ax(B), None, None))
+
+    def prefill(params, batch):
+        logits, aux, caches = forward(params, cfg, batch, rules, mesh,
+                                      backend=backend, want_cache=True)
+        # only the last position's logits are needed to continue decoding
+        return logits[:, -1:], caches
+
+    fn = jax.jit(prefill, in_shardings=(pshard, batch_shardings))
+    return fn, (pshard, batch_shardings), rules
+
+
+def make_decode_step(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                     backend: str = "xla", donate: bool = True):
+    cfg = bind_runtime(cfg, mesh, shape.global_batch)
+    pshard, _, specs, rules = param_and_opt_shardings(cfg, mesh)
+    B = shape.global_batch
+    S = shape.seq_len
+    state_shapes, state_specs = decode_state_specs(cfg, S, B, rules)
+    sshard = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                          is_leaf=lambda x: isinstance(x, P))
+    batch_shardings = {"tokens": NamedSharding(mesh, rules.tokens(B)),
+                       "cur_len": NamedSharding(mesh, P())}
+    if cfg.family == "vlm":
+        batch_shardings["positions"] = NamedSharding(
+            mesh, P(rules.batch_ax(B), None, None))
+
+    def step(params, batch, state):
+        logits, new_state = decode_step(params, cfg, batch, state, rules, mesh)
+        return logits, new_state
+
+    logit_shard = NamedSharding(mesh, rules.act_logits(B, cfg.vocab_padded))
+    fn = jax.jit(step, in_shardings=(pshard, batch_shardings, sshard),
+                 out_shardings=(logit_shard, sshard),
+                 donate_argnums=(2,) if donate else ())
+    return fn, (pshard, batch_shardings, sshard), state_shapes, rules

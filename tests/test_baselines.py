@@ -1,0 +1,55 @@
+"""Baseline indexes (ZM, Flood, R-tree) return exact counts."""
+import numpy as np
+import pytest
+
+from repro.baselines.flood import build_flood
+from repro.baselines.rstar import build_rtree
+from repro.baselines.zm import build_zm_index
+from repro.core.query import brute_force_count, query_count
+from repro.core.theta import default_K
+from repro.data.synth import make_dataset
+from repro.data.workload import make_workload
+
+
+@pytest.mark.parametrize("name", ["osm", "nyc", "stock"])
+def test_zm_index_exact(name):
+    data = make_dataset(name, 3000, seed=7)
+    K = default_K(data.shape[1])
+    Ls, Us = make_workload(data, 25, seed=7, K=K)
+    idx = build_zm_index(data, K=K, page_bytes=2048)
+    for l, u in zip(Ls, Us):
+        assert query_count(idx, l, u).result == brute_force_count(data, l, u)
+
+
+@pytest.mark.parametrize("name", ["osm", "nyc"])
+def test_flood_exact(name):
+    data = make_dataset(name, 4000, seed=8)
+    K = default_K(data.shape[1])
+    Ls, Us = make_workload(data, 30, seed=8, K=K)
+    fi = build_flood(data, (Ls, Us), K=K, page_bytes=2048)
+    for l, u in zip(Ls, Us):
+        assert fi.query(l, u).result == brute_force_count(data, l, u)
+
+
+@pytest.mark.parametrize("name", ["osm", "stock"])
+def test_rtree_exact(name):
+    data = make_dataset(name, 5000, seed=9)
+    Ls, Us = make_workload(data, 30, seed=9)
+    rt = build_rtree(data, page_bytes=2048, fanout=16)
+    for l, u in zip(Ls, Us):
+        assert rt.query(l, u).result == brute_force_count(data, l, u)
+
+
+def test_rtree_structure():
+    data = make_dataset("osm", 4000, seed=10)
+    rt = build_rtree(data, page_bytes=1024, fanout=8)
+    # every point accounted for exactly once
+    assert rt.leaf_starts[-1] == len(data)
+    # root level small
+    assert len(rt.levels[-1][0]) <= 8
+    # MBR nesting: every leaf MBR inside some level-0 node MBR
+    mbrs0, cs = rt.levels[0]
+    for nd in range(len(mbrs0)):
+        ch = rt.leaf_mbrs[cs[nd]:cs[nd + 1]]
+        assert np.all(ch[:, :, 0] >= mbrs0[nd, :, 0])
+        assert np.all(ch[:, :, 1] <= mbrs0[nd, :, 1])

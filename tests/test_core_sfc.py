@@ -1,0 +1,153 @@
+"""Unit + property tests: Z64 arithmetic, θ family, SFC encode/decode."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import zorder64 as z64
+from repro.core.sfc import decode_np, encode_jax, encode_np
+from repro.core.theta import (Theta, default_K, major_order, neighbors,
+                              random_theta, zorder)
+
+u64s = st.integers(min_value=0, max_value=2**64 - 1)
+
+
+# ---------------------------------------------------------------------------
+# Z64 arithmetic vs uint64
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(u64s, u64s)
+def test_z64_compare_matches_u64(a, b):
+    za = jnp.asarray(z64.u64_to_z64(np.uint64(a)))
+    zb = jnp.asarray(z64.u64_to_z64(np.uint64(b)))
+    assert bool(z64.z64_lt(za, zb)) == (a < b)
+    assert bool(z64.z64_le(za, zb)) == (a <= b)
+    assert bool(z64.z64_eq(za, zb)) == (a == b)
+
+
+@settings(max_examples=200, deadline=None)
+@given(u64s, u64s)
+def test_z64_addsub_matches_u64(a, b):
+    za = jnp.asarray(z64.u64_to_z64(np.uint64(a)))
+    zb = jnp.asarray(z64.u64_to_z64(np.uint64(b)))
+    add = z64.z64_to_u64(np.asarray(z64.z64_add(za, zb)))
+    sub = z64.z64_to_u64(np.asarray(z64.z64_sub(za, zb)))
+    assert int(add) == (a + b) % 2**64
+    assert int(sub) == (a - b) % 2**64
+
+
+def test_z64_searchsorted():
+    rng = np.random.default_rng(0)
+    keys = np.sort(rng.integers(0, 2**64, size=257, dtype=np.uint64))
+    qs = np.concatenate([keys[::5], rng.integers(0, 2**64, 64, dtype=np.uint64),
+                         np.asarray([0, 2**64 - 1], np.uint64)])
+    kz = jnp.asarray(z64.u64_to_z64(keys))
+    qz = jnp.asarray(z64.u64_to_z64(qs))
+    left = np.asarray(z64.z64_searchsorted(kz, qz, "left"))
+    right = np.asarray(z64.z64_searchsorted(kz, qz, "right"))
+    np.testing.assert_array_equal(left, np.searchsorted(keys, qs, "left"))
+    np.testing.assert_array_equal(right, np.searchsorted(keys, qs, "right"))
+
+
+# ---------------------------------------------------------------------------
+# θ family constraints (paper §4.3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,K", [(2, 4), (3, 5), (2, 32), (3, 21), (4, 16)])
+def test_theta_constraints(d, K):
+    rng = np.random.default_rng(0)
+    for theta in [zorder(d, K), major_order(d, K), random_theta(rng, d, K)]:
+        vals = theta.theta_values()
+        # (1) all powers of two within range — by construction of 1<<pos
+        assert np.all(vals > 0)
+        # (2) distinct
+        assert len(np.unique(vals)) == d * K
+        # (3) increasing per dimension
+        assert np.all(np.diff(vals.astype(np.float64), axis=1) > 0)
+
+
+def test_zorder_matches_paper_example():
+    # Fig 2(a): d=2, K=3, x=(4,6) -> z-order address 56
+    theta = zorder(2, 3)
+    assert int(encode_np(np.asarray([[4, 6]], np.uint64), theta)[0]) == 56
+    # Fig 2(c): column-major theta_c=[[8,16,32],[1,2,4]] -> 38
+    theta_c = major_order(2, 3, order=[1, 0])
+    assert int(encode_np(np.asarray([[4, 6]], np.uint64), theta_c)[0]) == 38
+
+
+def test_generalized_example_fig2b():
+    # Fig 2(b): theta_g=[[1,16,32],[2,4,8]] -> f((4,6)) = 44
+    # positions: dim0 bits at 0,4,5 ; dim1 bits at 1,2,3
+    seq = (0, 1, 1, 1, 0, 0)
+    theta = Theta(2, 3, seq)
+    np.testing.assert_array_equal(theta.theta_values(),
+                                  np.asarray([[1, 16, 32], [2, 4, 8]], np.uint64))
+    assert int(encode_np(np.asarray([[4, 6]], np.uint64), theta)[0]) == 44
+
+
+# ---------------------------------------------------------------------------
+# encode/decode properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 4), st.integers(0, 2**32 - 1), st.data())
+def test_roundtrip_and_monotone(d, seed, data):
+    K = default_K(d)
+    rng = np.random.default_rng(seed)
+    theta = random_theta(rng, d, K)
+    xs = rng.integers(0, 2**K, size=(32, d), dtype=np.uint64)
+    z = encode_np(xs, theta)
+    back = decode_np(z, theta)
+    np.testing.assert_array_equal(back, xs)
+    # monotone: a <= b componentwise => f(a) <= f(b)
+    a = np.minimum(xs[:16], xs[16:])
+    b = np.maximum(xs[:16], xs[16:])
+    assert np.all(encode_np(a, theta) <= encode_np(b, theta))
+
+
+@pytest.mark.parametrize("d", [2, 3, 4])
+def test_encode_jax_matches_np(d):
+    K = default_K(d)
+    rng = np.random.default_rng(d)
+    theta = random_theta(rng, d, K)
+    xs = rng.integers(0, 2**K, size=(257, d), dtype=np.uint64)
+    want = encode_np(xs, theta)
+    got = np.asarray(encode_jax(jnp.asarray(xs.astype(np.int64), jnp.int32)
+                                if K == 32 else jnp.asarray(xs, jnp.int32), theta))
+    np.testing.assert_array_equal(z64.z64_to_u64(got), want)
+
+
+def test_encode_jax_full_64bit_d2():
+    """d=2, K=32: values use all 32 bits incl. the int32 sign bit."""
+    K = default_K(2)
+    assert K == 32
+    rng = np.random.default_rng(7)
+    theta = random_theta(rng, 2, K)
+    xs = rng.integers(0, 2**32, size=(128, 2), dtype=np.uint64)
+    want = encode_np(xs, theta)
+    xi = jnp.asarray(xs.astype(np.uint32).view(np.int32))
+    got = np.asarray(encode_jax(xi, theta))
+    np.testing.assert_array_equal(z64.z64_to_u64(got), want)
+
+
+def test_neighbors_are_valid_thetas():
+    rng = np.random.default_rng(0)
+    t = zorder(3, 8)
+    for nb in neighbors(t, rng, n=16):
+        assert isinstance(nb, Theta)  # __post_init__ validates counts
+
+
+@pytest.mark.parametrize("d", [2, 3, 4])
+def test_table_encode_matches_reference(d):
+    from repro.core.sfc import encode_np_ref
+    K = default_K(d)
+    rng = np.random.default_rng(d * 7)
+    theta = random_theta(rng, d, K)
+    xs = rng.integers(0, 2**K, size=(500, d), dtype=np.uint64)
+    np.testing.assert_array_equal(encode_np(xs, theta),
+                                  encode_np_ref(xs, theta))

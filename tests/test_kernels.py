@@ -1,0 +1,133 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import zorder64 as z64
+from repro.core.sfc import encode_np
+from repro.core.theta import default_K, random_theta, zorder
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import mha_ref
+from repro.kernels.sfc_encode.ops import sfc_encode
+from repro.kernels.window_filter.ops import window_filter
+from repro.kernels.window_filter.ref import window_filter_ref
+
+
+# ---------------------------------------------------------------------------
+# sfc_encode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [2, 3, 4])
+@pytest.mark.parametrize("n", [64, 1000, 4096])
+def test_sfc_encode_kernel_matches_oracle(d, n):
+    K = default_K(d)
+    rng = np.random.default_rng(d * 100 + n)
+    theta = random_theta(rng, d, K)
+    xs = rng.integers(0, 2**K, size=(n, d), dtype=np.uint64)
+    xi = jnp.asarray(xs.astype(np.uint32).view(np.int32))
+    ref = np.asarray(sfc_encode(xi, theta, backend="xla"))
+    got = np.asarray(sfc_encode(xi, theta, backend="pallas", block_n=256,
+                                interpret=True))
+    np.testing.assert_array_equal(got, ref)
+    # and against the numpy u64 oracle
+    np.testing.assert_array_equal(z64.z64_to_u64(got), encode_np(xs, theta))
+
+
+@pytest.mark.parametrize("block_n", [128, 512, 2048])
+def test_sfc_encode_block_shapes(block_n):
+    d, K = 2, 32
+    rng = np.random.default_rng(block_n)
+    theta = zorder(d, K)
+    xs = rng.integers(0, 2**K, size=(3000, d), dtype=np.uint64)
+    xi = jnp.asarray(xs.astype(np.uint32).view(np.int32))
+    got = np.asarray(sfc_encode(xi, theta, backend="pallas",
+                                block_n=block_n, interpret=True))
+    np.testing.assert_array_equal(z64.z64_to_u64(got), encode_np(xs, theta))
+
+
+# ---------------------------------------------------------------------------
+# window_filter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,cap,G", [(2, 128, 7), (3, 256, 16), (4, 512, 33)])
+def test_window_filter_kernel_matches_oracle(d, cap, G):
+    K = default_K(d)
+    rng = np.random.default_rng(G)
+    pts = rng.integers(0, 2**K, size=(G, d, cap), dtype=np.uint64)
+    lo = rng.integers(0, 2**K, size=(G, d), dtype=np.uint64)
+    hi = np.minimum(lo + rng.integers(0, 2**K, size=(G, d), dtype=np.uint64),
+                    np.uint64(2**K - 1))
+    rect = np.stack([lo, hi], axis=-1)
+    size = rng.integers(0, cap + 1, size=(G,))
+    pts_i = jnp.asarray(pts.astype(np.uint32).view(np.int32))
+    rect_i = jnp.asarray(rect.astype(np.uint32).view(np.int32))
+    size_i = jnp.asarray(size, jnp.int32)
+    ref = np.asarray(window_filter_ref(pts_i, rect_i, size_i))
+    got = np.asarray(window_filter(pts_i, rect_i, size_i, backend="pallas",
+                                   block_g=4, interpret=True))
+    np.testing.assert_array_equal(got, ref)
+    # numpy brute force
+    want = np.zeros(G, np.int64)
+    for g in range(G):
+        p = pts[g, :, :size[g]]
+        want[g] = np.all((p >= lo[g][:, None]) & (p <= hi[g][:, None]), 0).sum()
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KH,S,dh", [
+    (1, 4, 4, 256, 64),     # MHA
+    (2, 8, 2, 128, 64),     # GQA
+    (1, 4, 1, 256, 128),    # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, H, KH, S, dh, causal, dtype):
+    key = jax.random.PRNGKey(B * 1000 + H)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, H, S, dh), dtype)
+    k = jax.random.normal(kk, (B, KH, S, dh), dtype)
+    v = jax.random.normal(kv, (B, KH, S, dh), dtype)
+    ref = mha_ref(q, k, v, causal=causal)
+    got = flash_attention(q, k, v, causal=causal, backend="pallas",
+                          bq=64, bk=64, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_sliding_window():
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    B, H, S, dh = 1, 2, 512, 64
+    q = jax.random.normal(kq, (B, H, S, dh), jnp.float32)
+    k = jax.random.normal(kk, (B, H, S, dh), jnp.float32)
+    v = jax.random.normal(kv, (B, H, S, dh), jnp.float32)
+    for w in (64, 192):
+        ref = mha_ref(q, k, v, causal=True, window=w)
+        got = flash_attention(q, k, v, causal=True, window=w,
+                              backend="pallas", bq=64, bk=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 64), (128, 32)])
+def test_flash_attention_block_shape_sweep(bq, bk):
+    key = jax.random.PRNGKey(42)
+    kq, kk, kv = jax.random.split(key, 3)
+    B, H, S, dh = 1, 2, 256, 64
+    q = jax.random.normal(kq, (B, H, S, dh), jnp.float32)
+    k = jax.random.normal(kk, (B, H, S, dh), jnp.float32)
+    v = jax.random.normal(kv, (B, H, S, dh), jnp.float32)
+    ref = mha_ref(q, k, v, causal=True)
+    got = flash_attention(q, k, v, causal=True, backend="pallas",
+                          bq=bq, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,174 @@
+"""Per-architecture reduced-config smoke tests: one forward/train step on
+CPU, shape + finiteness asserts; decode paths; SSM chunked-vs-stepwise
+equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, input_specs, shape_applicable
+from repro.configs.registry import ARCHS, get_arch, reduced_config
+from repro.dist.sharding import ShardingRules
+from repro.models.mamba2 import (init_mamba2, mamba2_decode_step,
+                                 mamba2_forward, mamba2_init_state)
+from repro.models.transformer import (decode_step, forward, init_decode_state,
+                                      init_model, lm_loss)
+from repro.models.xlstm import mlstm_chunked, mlstm_reference
+
+RULES = ShardingRules(model_size=1, data_size=1, fsdp=False)
+
+
+def _batch_for(cfg, B, S, key):
+    ks = jax.random.split(key, 4)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :, None],
+                               (B, S, 3))
+        batch["positions"] = pos
+        batch["image_embeds"] = jax.random.normal(
+            ks[1], (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16) * 0.02
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(
+            ks[2], (B, S // cfg.enc_seq_div, cfg.d_model), jnp.bfloat16) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_forward_and_loss(name):
+    cfg = reduced_config(get_arch(name))
+    key = jax.random.PRNGKey(0)
+    params, specs = init_model(key, cfg, RULES)
+    # spec tree mirrors param tree
+    assert jax.tree.structure(jax.tree.map(lambda x: 0, params)) \
+        == jax.tree.structure(jax.tree.map(lambda x: 0, specs),)
+    B, S = 2, 64
+    batch = _batch_for(cfg, B, S, jax.random.PRNGKey(1))
+    logits, aux, _ = forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, aux = lm_loss(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("name", ["qwen3-4b", "mixtral-8x22b", "zamba2-1.2b",
+                                  "xlstm-125m", "seamless-m4t-medium"])
+def test_train_grad_step(name):
+    cfg = reduced_config(get_arch(name))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg, RULES)
+    batch = _batch_for(cfg, 2, 64, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        l, _ = lm_loss(p, cfg, batch)
+        return l
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_decode_step_runs(name):
+    cfg = reduced_config(get_arch(name))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg, RULES)
+    B, S_max = 2, 96
+    state = init_decode_state(cfg, S_max, B)
+    batch = {"tokens": jnp.ones((B, 1), jnp.int32),
+             "cur_len": jnp.int32(5)}
+    if cfg.family == "vlm":
+        batch["positions"] = jnp.full((B, 1, 3), 5, jnp.int32)
+    logits, new_state = decode_step(params, cfg, batch, state)
+    assert logits.shape == (B, 1, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # state must actually change
+    changed = jax.tree.map(lambda a, b: float(jnp.sum(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), state, new_state)
+    assert sum(jax.tree.leaves(changed)) > 0
+
+
+@pytest.mark.parametrize("name", ["qwen3-4b", "granite-34b", "yi-6b",
+                                  "seamless-m4t-medium"])
+def test_prefill_decode_consistency(name):
+    """decode at position S must match the full forward at position S."""
+    cfg = reduced_config(get_arch(name))
+    params, _ = init_model(jax.random.PRNGKey(0), cfg, RULES)
+    B, S = 2, 64
+    batch = _batch_for(cfg, B, S + 1, jax.random.PRNGKey(1))
+    full_logits, _, _ = forward(params, cfg, batch)
+
+    pre = {k: (v[:, :S] if k in ("tokens",) else v) for k, v in batch.items()}
+    _, _, caches = forward(params, cfg, pre, want_cache=True)
+    state = init_decode_state(cfg, S + 16, B)
+    for k in ("k", "v", "cross_k", "cross_v"):
+        if k in caches and k in state:
+            upd = caches[k]
+            state[k] = jax.lax.dynamic_update_slice(
+                state[k], upd.astype(state[k].dtype), (0, 0, 0, 0, 0))
+    dbatch = {"tokens": batch["tokens"][:, S:S + 1], "cur_len": jnp.int32(S)}
+    dec_logits, _ = decode_step(params, cfg, dbatch, state)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0], np.float32),
+        np.asarray(full_logits[:, S], np.float32), atol=0.15, rtol=0.1)
+
+
+def test_mlstm_chunked_matches_reference():
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    B, S, H, dh = 2, 128, 4, 32
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, dh), jnp.float32)
+    i_pre = jax.random.normal(ks[3], (B, S, H), jnp.float32)
+    logf = -jax.nn.softplus(-jax.random.normal(ks[4], (B, S, H)))
+    ref = mlstm_reference(q, k, v, i_pre, logf)
+    for chunk in (16, 32, 128):
+        got = mlstm_chunked(q, k, v, i_pre, logf, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-4, rtol=2e-3)
+
+
+def test_mamba2_chunked_matches_stepwise():
+    cfg = reduced_config(get_arch("zamba2-1.2b"))
+    key = jax.random.PRNGKey(4)
+    p, _ = init_mamba2(key, cfg, RULES)
+    B, S = 2, 64
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S, cfg.d_model),
+                          jnp.float32) * 0.5
+    y_par = mamba2_forward(p, cfg, x.astype(jnp.bfloat16), chunk=16)
+    state = mamba2_init_state(cfg, B)
+    outs = []
+    for t in range(S):
+        y, state = mamba2_decode_step(p, cfg, x[:, t:t + 1].astype(jnp.bfloat16),
+                                      state)
+        outs.append(y)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par, np.float32),
+                               np.asarray(y_seq, np.float32),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_input_specs_and_applicability():
+    for name, cfg in ARCHS.items():
+        for sh in SHAPES.values():
+            if not shape_applicable(cfg, sh):
+                assert sh.name == "long_500k" and not cfg.sub_quadratic
+                continue
+            specs = input_specs(cfg, sh)
+            assert "tokens" in specs
+            for v in specs.values():
+                assert isinstance(v, jax.ShapeDtypeStruct)
+    assert sum(cfg.sub_quadratic for cfg in ARCHS.values()) == 2
+
+
+def test_param_counts_in_expected_range():
+    # sanity: headline sizes within a factor of ~1.6 of the advertised name
+    expect = {"qwen3-4b": 4e9, "granite-34b": 34e9, "minitron-8b": 8e9,
+              "yi-6b": 6e9, "qwen2-vl-72b": 72e9, "xlstm-125m": 125e6}
+    for name, n in expect.items():
+        got = get_arch(name).param_count()
+        assert 0.55 * n < got < 1.7 * n, (name, got / 1e9)
+    moe = get_arch("mixtral-8x22b")
+    assert moe.param_count() > 1.2e11          # ~140B total
+    assert moe.active_param_count() < 5e10     # ~39B active

@@ -1,0 +1,171 @@
+"""Paging (DP optimality, heuristic validity) and query-splitting tests."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import paging
+from repro.core.sfc import encode_np
+from repro.core.split import optimal_1split, recursive_split
+from repro.core.theta import Theta, random_theta, zorder
+
+
+def _sorted_points(rng, n, d, K, theta):
+    xs = np.unique(rng.integers(0, 2**K, size=(n, d), dtype=np.uint64), axis=0)
+    z = encode_np(xs, theta)
+    return xs[np.argsort(z)].astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# paging
+# ---------------------------------------------------------------------------
+
+
+def _brute_force_opt(xs, smin, smax, K):
+    """Exponential-time optimal paging for tiny inputs."""
+    n = len(xs)
+    best = {0: (0.0, None)}
+
+    def score(l, r):
+        seg = xs[l:r]
+        return paging._norm_vol(seg.min(0), seg.max(0), K) / (r - l)
+
+    OPT = np.full(n + 1, np.inf)
+    OPT[0] = 0.0
+    for i in range(1, n + 1):
+        if i < smin:
+            OPT[i] = score(0, i)
+        for s in range(smin, min(smax, i) + 1):
+            OPT[i] = min(OPT[i], OPT[i - s] + score(i - s, i))
+    return OPT[n]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(20, 90))
+def test_dp_matches_bruteforce(seed, n):
+    rng = np.random.default_rng(seed)
+    K = 8
+    xs = _sorted_points(rng, n, 2, K, zorder(2, K))
+    smin, smax = 4, 16
+    starts = paging.dp_paging_np(xs, smin, smax, K)
+    got = paging.total_score(xs, starts, K)
+    want = _brute_force_opt(xs, smin, smax, K)
+    assert got == pytest.approx(want, rel=1e-9)
+    sizes = np.diff(starts)
+    assert np.all(sizes <= smax)
+    assert np.all(sizes[1:] >= smin)  # at most the first page undersized
+
+
+def test_dp_jax_matches_np():
+    rng = np.random.default_rng(3)
+    K = 10
+    xs = _sorted_points(rng, 600, 2, K, zorder(2, K))
+    smin, smax = 8, 32
+    a = paging.dp_paging_np(xs, smin, smax, K)
+    b = paging.dp_paging_jax(xs, smin, smax, K)
+    sa = paging.total_score(xs, a, K)
+    sb = paging.total_score(xs, b, K)
+    assert sb == pytest.approx(sa, rel=1e-5)  # equal-cost ties may differ
+
+
+def test_paging_ordering_dp_le_heuristic_le_fixed():
+    rng = np.random.default_rng(0)
+    K = 12
+    theta = zorder(2, K)
+    xs = _sorted_points(rng, 3000, 2, K, theta)
+    smin, smax = 16, 64
+    s_dp = paging.total_score(xs, paging.dp_paging_np(xs, smin, smax, K), K)
+    s_h = paging.total_score(xs, paging.heuristic_paging(xs, smin, smax, K), K)
+    s_f = paging.total_score(xs, paging.fixed_paging(len(xs), smax), K)
+    assert s_dp <= s_h + 1e-12
+    assert s_dp <= s_f + 1e-12
+
+
+def test_heuristic_sizes_valid():
+    rng = np.random.default_rng(1)
+    K = 12
+    xs = _sorted_points(rng, 5000, 3, K, zorder(3, K))
+    starts = paging.heuristic_paging(xs, 10, 40, K, alpha=1.5)
+    sizes = np.diff(starts)
+    assert starts[0] == 0 and starts[-1] == len(xs)
+    assert np.all(sizes <= 40)
+    assert np.all(sizes[:-1] >= 10)  # only the tail page may be undersized
+
+
+# ---------------------------------------------------------------------------
+# optimal 1-split (Lemma 2) vs exhaustive search
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_1split_is_optimal(seed):
+    rng = np.random.default_rng(seed)
+    d, K = 2, 5
+    theta = random_theta(rng, d, K)
+    lo = rng.integers(0, 2**K - 1, size=d)
+    hi = np.minimum(lo + rng.integers(1, 2**K, size=d), 2**K - 1)
+    qL, qU = lo.astype(np.uint64), hi.astype(np.uint64)
+    got = optimal_1split(qL, qU, theta)
+
+    # exhaustive over every (delta, v)
+    best_gap = None
+    for delta in range(d):
+        for v in range(int(qL[delta]) + 1, int(qU[delta]) + 1):
+            U = qU.copy()
+            U[delta] = np.uint64(v - 1)
+            L = qL.copy()
+            L[delta] = np.uint64(v)
+            fU = int(encode_np(U[None], theta)[0])
+            fL = int(encode_np(L[None], theta)[0])
+            if fL > fU:
+                gap = fL - fU
+                if best_gap is None or gap > best_gap:
+                    best_gap = gap
+    if best_gap is None:
+        assert got is None
+    else:
+        assert got is not None and got[2] == best_gap
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, 4))
+def test_recursive_split_partitions_query(seed, k):
+    """Sub-queries are disjoint and exactly cover the query volume."""
+    rng = np.random.default_rng(seed)
+    d, K = 2, 4
+    theta = random_theta(rng, d, K)
+    lo = rng.integers(0, 2**K - 1, size=d)
+    hi = np.minimum(lo + rng.integers(0, 2**K, size=d), 2**K - 1)
+    qL, qU = lo.astype(np.uint64), hi.astype(np.uint64)
+    rects = recursive_split(qL, qU, theta, k)
+    assert len(rects) <= 2**k
+    cover = np.zeros((2**K, 2**K), dtype=np.int64)
+    for rL, rU in rects:
+        cover[int(rL[0]):int(rU[0]) + 1, int(rL[1]):int(rU[1]) + 1] += 1
+    want = np.zeros_like(cover)
+    want[int(qL[0]):int(qU[0]) + 1, int(qL[1]):int(qU[1]) + 1] = 1
+    np.testing.assert_array_equal(cover, want)
+
+
+def test_split_shrinks_total_zrange():
+    """Splitting never increases the summed z-range (the paper's objective)."""
+    rng = np.random.default_rng(0)
+    d, K = 2, 8
+    theta = random_theta(rng, d, K)
+    for _ in range(50):
+        lo = rng.integers(0, 2**K - 2, size=d)
+        hi = np.minimum(lo + rng.integers(1, 2**K, size=d), 2**K - 1)
+        qL, qU = lo.astype(np.uint64), hi.astype(np.uint64)
+
+        def total_range(rects):
+            return sum(int(encode_np(rU[None], theta)[0])
+                       - int(encode_np(rL[None], theta)[0]) + 1
+                       for rL, rU in rects)
+
+        r0 = total_range([(qL, qU)])
+        r1 = total_range(recursive_split(qL, qU, theta, 1))
+        r4 = total_range(recursive_split(qL, qU, theta, 4))
+        assert r1 <= r0
+        assert r4 <= r1

@@ -1,0 +1,47 @@
+"""Paper §7.11: insertion via delta pages (LMSFCb), tombstone deletion,
+periodic rebuild (LMSFCa)."""
+import numpy as np
+
+from repro.core import index as index_mod
+from repro.core.index import IndexConfig, LMSFCIndex
+from repro.core.query import brute_force_count, query_count
+from repro.core.theta import default_K
+from repro.data.synth import make_dataset
+from repro.data.workload import make_workload
+
+
+def test_insert_delete_rebuild_exact():
+    rng = np.random.default_rng(0)
+    data = make_dataset("osm", 3000, seed=11)
+    K = default_K(2)
+    Ls, Us = make_workload(data, 30, seed=11, K=K)
+    idx = LMSFCIndex.build(data, cfg=IndexConfig(paging="heuristic",
+                                                 page_bytes=2048),
+                           workload=(Ls, Us), K=K)
+    # insert 10% new points
+    new_pts = np.unique(rng.integers(0, 2**K, size=(300, 2), dtype=np.uint64),
+                        axis=0)
+    mask = ~np.any(np.all(new_pts[:, None] == data[None, :400], axis=2), 1)
+    new_pts = new_pts[mask]
+    for x in new_pts:
+        index_mod.insert(idx, x)
+    # delete a few base + a few inserted points
+    deleted = [data[5], data[77], new_pts[0], new_pts[1]]
+    for x in deleted:
+        index_mod.delete(idx, x)
+
+    logical = np.concatenate([data, new_pts])
+    dset = {tuple(int(v) for v in x) for x in deleted}
+    keep = np.asarray([tuple(int(v) for v in r) not in dset for r in logical])
+    logical = np.unique(logical[keep], axis=0)
+
+    for qL, qU in zip(Ls, Us):
+        got = query_count(idx, qL, qU).result
+        want = brute_force_count(logical, qL, qU)
+        assert got == want
+
+    assert index_mod.needs_rebuild(idx, frac=0.05)
+    idx2 = index_mod.rebuild(idx, workload=(Ls, Us))
+    for qL, qU in zip(Ls, Us):
+        assert query_count(idx2, qL, qU).result == \
+            brute_force_count(logical, qL, qU)
