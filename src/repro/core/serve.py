@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..dist.compat import shard_map
 from ..kernels.window_filter.ops import window_filter
 from .index import LMSFCIndex
 from .split import recursive_split_jax, zranges_jax
@@ -101,7 +102,9 @@ def _u32_le(a, b):
 def make_query_fn(theta: Theta, *, k_maxsplit: int = 4, max_cand: int = 64,
                   q_chunk: int = 16, backend: str = "xla"):
     """Returns query_batch(arrays, queries (Q, d, 2) int32) -> (counts (Q,),
-    overflowed (Q,) bool).  Static shapes throughout; Q % q_chunk == 0."""
+    overflowed (Q,) int32 overflow counts — 0/1 on a single shard, psum-
+    additive across shards in the distributed engine).  Static shapes
+    throughout; Q % q_chunk == 0."""
 
     def _chunk(arrays: ServingArrays, queries):
         Qc = queries.shape[0]
@@ -152,7 +155,7 @@ def make_query_fn(theta: Theta, *, k_maxsplit: int = 4, max_cand: int = 64,
         assert Q % q_chunk == 0
         qs = queries.reshape(Q // q_chunk, q_chunk, *queries.shape[1:])
         counts, over = jax.lax.map(functools.partial(_chunk, arrays), qs)
-        return counts.reshape(Q), over.reshape(Q)
+        return counts.reshape(Q), over.reshape(Q).astype(jnp.int32)
 
     return query_batch
 
@@ -174,15 +177,15 @@ def make_distributed_query_fn(theta: Theta, mesh, *, k_maxsplit: int = 4,
     def _local(arrays, queries):
         counts, over = local(arrays, queries)
         counts = jax.lax.psum(counts, axes)
-        over = jax.lax.psum(over.astype(jnp.int32), axes)
+        over = jax.lax.psum(over, axes)  # int32: # of overflowed shards
         return counts, over
 
     shard_specs = ServingArrays(
         points=P(axes), page_zmin=P(axes), page_zmax=P(axes),
         page_mbr=P(axes), page_size=P(axes))
-    f = jax.shard_map(_local, mesh=mesh,
-                      in_specs=(shard_specs, P()),
-                      out_specs=(P(), P()))
+    f = shard_map(_local, mesh=mesh,
+                  in_specs=(shard_specs, P()),
+                  out_specs=(P(), P()))
     return f, shard_specs
 
 

@@ -1,0 +1,15 @@
+"""Distribution layer: sharding rules, loop-aware HLO analysis, roofline.
+
+``sharding``     — logical-axis -> PartitionSpec mapping for every model
+                   family (the single source of truth the step factories,
+                   model inits, and the serving engine consume).
+``hlo_analysis`` — text-level analyzer over ``compiled.as_text()`` that
+                   multiplies scan/while body costs by trip count (XLA's
+                   ``cost_analysis()`` counts loop bodies once).
+``roofline``     — MODEL_FLOPS accounting + compute/memory/wire time terms
+                   per dry-run cell.
+"""
+from . import hlo_analysis, roofline, sharding
+from .sharding import ShardingRules
+
+__all__ = ["ShardingRules", "hlo_analysis", "roofline", "sharding"]

@@ -1,0 +1,23 @@
+"""JAX version compatibility for the distribution layer.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(renaming ``check_rep`` -> ``check_vma`` along the way); this wrapper accepts
+the modern spelling and degrades to the experimental API on older jax.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    kw = {}
+    if hasattr(jax, "shard_map"):
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -32,7 +32,8 @@ def make_rules(cfg: ArchConfig, mesh) -> ShardingRules:
     return ShardingRules(model_size=shape.get("model", 1),
                          data_size=shape.get("data", 1),
                          fsdp=cfg.fsdp,
-                         multi_pod="pod" in shape)
+                         multi_pod="pod" in shape,
+                         pod_size=shape.get("pod", 1))
 
 
 def bind_runtime(cfg: ArchConfig, mesh, batch: int) -> ArchConfig:

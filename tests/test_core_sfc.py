@@ -1,6 +1,8 @@
 """Unit + property tests: Z64 arithmetic, θ family, SFC encode/decode."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -1,0 +1,84 @@
+"""ShardingRules: every rule maps to mesh axes ("data", "model"), FSDP
+shards weights on "data", invalid head divisibility raises."""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import ShardingRules
+
+MESH_AXES = {"data", "model", "pod", None}
+
+
+def _all_specs(rules, B=128):
+    return {
+        "vector": rules.vector(),
+        "embed": rules.embed(4096, 1024),
+        "dense_in": rules.dense_in(1024, 4096),
+        "dense_in_heads": rules.dense_in_heads(1024, 8, 1024),
+        "dense_out": rules.dense_out(4096, 1024),
+        "expert_in": rules.expert_in(8, 1024, 2048),
+        "expert_out": rules.expert_out(8, 2048, 1024),
+        "kv_cache": rules.kv_cache(B, 8),
+        "act_hidden": rules.act_hidden(B),
+        "act_logits": rules.act_logits(B, 4096),
+        "tokens": rules.tokens(B),
+    }
+
+
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_every_rule_returns_partition_spec_on_mesh_axes(fsdp):
+    rules = ShardingRules(model_size=2, data_size=4, fsdp=fsdp)
+    for name, spec in _all_specs(rules).items():
+        assert isinstance(spec, P), name
+        for entry in spec:
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            assert set(axes) <= MESH_AXES, (name, spec)
+    # tuple-returning state rules compose into PartitionSpecs
+    for tup in (rules.ssm_state(128, 8), rules.mlstm_state(128, 8, 64)):
+        spec = P(None, *tup)
+        assert isinstance(spec, P)
+        assert set(spec) <= MESH_AXES
+
+
+def test_fsdp_shards_embed_and_dense_weights_on_data():
+    rules = ShardingRules(model_size=2, data_size=4, fsdp=True)
+    assert rules.embed(4096, 1024) == P("model", "data")
+    assert rules.dense_in(1024, 4096) == P("data", "model")
+    assert rules.dense_out(4096, 1024) == P("model", "data")
+    assert rules.expert_in(8, 1024, 2048) == P(None, "data", "model")
+    assert rules.expert_out(8, 2048, 1024) == P(None, "model", "data")
+    # without fsdp the "data" entries vanish but tensor parallel stays
+    plain = ShardingRules(model_size=2, data_size=4, fsdp=False)
+    assert plain.embed(4096, 1024) == P("model", None)
+    assert plain.dense_in(1024, 4096) == P(None, "model")
+    assert plain.fsdp_ax is None and rules.fsdp_ax == "data"
+
+
+def test_head_and_batch_divisibility():
+    rules = ShardingRules(model_size=4, data_size=2, fsdp=True)
+    # kv heads < model shards but dividing: replicate, don't raise
+    assert rules.dense_in_heads(1024, 2, 256) == P("data", None)
+    assert rules.kv_cache(128, 2) == P("data", None, None, None)
+    # model_size does not divide n_heads (nor vice versa): raise
+    with pytest.raises(ValueError):
+        rules.dense_in_heads(1024, 6, 768)
+    with pytest.raises(ValueError):
+        rules.kv_cache(128, 6)
+    # non-divisible feature dims degrade to replicated, never padded
+    assert rules.dense_in(1021, 4095) == P(None, None)
+    # non-divisible batch replicates
+    assert rules.batch_ax(3) is None
+    assert rules.tokens(3) == P(None, None)
+
+
+def test_multi_pod_batch_axes():
+    rules = ShardingRules(model_size=16, data_size=16, fsdp=True,
+                          multi_pod=True)
+    assert rules.batch_ax(256) == ("pod", "data")
+    assert rules.tokens(256) == P(("pod", "data"), None)
+    assert rules.batch_ax(16) == "data"          # too small for pod x data
+    assert rules.act_hidden(256) == P(("pod", "data"), None, None)
+
+
+def test_invalid_mesh_sizes_raise():
+    with pytest.raises(ValueError):
+        ShardingRules(model_size=0, data_size=1, fsdp=False)

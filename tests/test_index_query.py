@@ -1,6 +1,8 @@
 """End-to-end index correctness: every engine/config returns exact counts."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.baselines.fnz import next_jump_in

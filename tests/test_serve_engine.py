@@ -39,6 +39,7 @@ def test_vectorized_engine_exact(name):
     qfn = make_query_fn(theta, k_maxsplit=4, max_cand=max(64, idx.num_pages),
                         q_chunk=8)
     counts, overflow = jax.jit(qfn)(arrays, q)
+    assert np.asarray(overflow).dtype == np.int32  # counts, not bools
     assert not np.any(np.asarray(overflow))
     np.testing.assert_array_equal(np.asarray(counts), want)
 
@@ -49,7 +50,8 @@ def test_overflow_flag_when_cand_bound_too_small():
     qfn = make_query_fn(theta, max_cand=1, q_chunk=8)
     counts, overflow = jax.jit(qfn)(arrays, q)
     got = np.asarray(counts)
-    over = np.asarray(overflow)
+    assert np.asarray(overflow).dtype == np.int32
+    over = np.asarray(overflow) > 0
     # exact wherever not overflowed; flagged wherever undercounted
     assert np.all(got[~over] == want[~over])
     assert np.all(got[over] <= want[over])
