@@ -1,45 +1,70 @@
-"""Beyond-paper: TPU-vectorized serving engine (mask->compact->gather->
-filter) vs the per-query CPU engine — batched throughput on the same index,
-plus the roofline terms of the lmsfc-serve dry-run cell."""
+"""Beyond-paper: the `repro.api.Database` facade's serving engines — the
+TPU-vectorized path (mask->compact->gather->filter) vs the per-query CPU
+engine on the same index — plus serving-array packing time (vectorized
+bulk scatter vs the old per-page Python loop)."""
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.query import query_count
-from repro.core.serve import build_serving_arrays, make_query_fn
+from repro.api import Database, EngineConfig
+from repro.core.serve import pack_serving_arrays
 
 from .common import build_lmsfc, record, standard_suite
+
+
+def _pack_loop_reference(index, cap=None):
+    """The pre-vectorization per-page packing loop (startup-dominating for
+    large page counts), kept for the before/after comparison."""
+    Pn, d = index.num_pages, index.d
+    cap = cap or int(np.diff(index.starts).max())
+    pts = np.zeros((Pn, d, cap), dtype=np.uint32)
+    size = np.zeros(Pn, dtype=np.int32)
+    for p in range(Pn):
+        s, e = index.starts[p], index.starts[p + 1]
+        pts[p, :, :e - s] = index.xs[s:e].astype(np.uint32).T
+        size[p] = e - s
+    return pts, size
 
 
 def run():
     rows = []
     data, train_wl, (Ls, Us), K = standard_suite("osm")
     idx, theta, _, _ = build_lmsfc(data, train_wl, K, paging="heuristic")
-    arrays = build_serving_arrays(idx)
+    db = Database(idx)
+
+    # -- serving-array packing: bulk scatter vs per-page loop --------------
+    reps = 3
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        host = pack_serving_arrays(idx)
+    pack_vec_ms = (time.perf_counter() - t0) / reps * 1e3
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _pack_loop_reference(idx)
+    pack_loop_ms = (time.perf_counter() - t0) / reps * 1e3
+    rows.append({"name": "serving_array_pack", "pages": idx.num_pages,
+                 "points": idx.n,
+                 "loop_ms": pack_loop_ms, "vectorized_ms": pack_vec_ms,
+                 "pack_speedup": pack_loop_ms / max(pack_vec_ms, 1e-9)})
+
+    # -- batched engine throughput vs the scalar CPU engine ----------------
     Q = (len(Ls) // 32) * 32
-    q = jnp.asarray(np.stack([Ls[:Q], Us[:Q]], -1)
-                    .astype(np.uint32).view(np.int32))
-    qfn = jax.jit(make_query_fn(theta, max_cand=256, q_chunk=32))
-    counts, over = qfn(arrays, q)  # compile + correctness
-    want = []
-    for l, u in zip(Ls[:Q], Us[:Q]):
-        want.append(query_count(idx, l, u).result)
-    exact = int(np.sum(np.asarray(counts) == np.asarray(want)))
+    wl = (Ls[:Q], Us[:Q])
+    db.engine("xla", EngineConfig(max_cand=256, q_chunk=32))
+    res = db.query(wl)                       # compile + pack + correctness
+    want = db.query(wl, engine="cpu")
+    exact = int(np.sum(res.counts == want.counts))
 
     t0 = time.perf_counter()
     reps = 5
     for _ in range(reps):
-        counts, _ = qfn(arrays, q)
-    counts.block_until_ready()
+        res = db.query(wl, engine="xla")
     us_batched = (time.perf_counter() - t0) / (reps * Q) * 1e6
 
     t0 = time.perf_counter()
-    for l, u in zip(Ls[:Q], Us[:Q]):
-        query_count(idx, l, u)
+    db.query(wl, engine="cpu")
     us_scalar = (time.perf_counter() - t0) / Q * 1e6
 
     rows.append({"name": "vectorized_engine", "us_per_query": us_batched,

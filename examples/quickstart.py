@@ -1,5 +1,6 @@
-"""Quickstart: learn a monotonic SFC, build the LMSFC index, run window
-queries, and compare against the fixed-z-order ZM-index.
+"""Quickstart for the `repro.api.Database` facade: learn a monotonic SFC
+with SMBO, build the LMSFC index, run exact window queries, apply LMSFCb
+delta updates, and compare against the fixed-z-order ZM-index.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,10 +8,9 @@ import time
 
 import numpy as np
 
+from repro.api import Database
 from repro.baselines.zm import build_zm_index
-from repro.core.index import IndexConfig, LMSFCIndex
-from repro.core.query import brute_force_count, query_count, run_workload
-from repro.core.smbo import learn_sfc
+from repro.core.query import brute_force_count, run_workload
 from repro.core.theta import default_K
 from repro.data.synth import make_dataset
 from repro.data.workload import make_workload
@@ -23,34 +23,43 @@ def main():
     Ls_tr, Us_tr = make_workload(data, 100, seed=1, K=K)
     Ls_te, Us_te = make_workload(data, 200, seed=2, K=K)
 
-    print("learning a monotonic SFC with SMBO (random-forest surrogate)...")
-    rng = np.random.default_rng(0)
-    sample = data[rng.choice(len(data), 3000, replace=False)]
+    print("Database.fit: SMBO θ-learning (random-forest surrogate) + "
+          "cost-based paging + per-page sort dims + PGM forward index...")
     t0 = time.time()
-    res = learn_sfc(sample, Ls_tr, Us_tr, K=K, max_iters=4, n_init=6,
-                    evals_per_iter=3, verbose=True)
-    print(f"learned θ in {time.time()-t0:.1f}s; cost history: "
-          f"{[round(y, 2) for _, y in res.history]}")
+    db = Database.fit(data, (Ls_tr, Us_tr), K=K,
+                      smbo=dict(max_iters=4, n_init=6, evals_per_iter=3,
+                                verbose=True))
+    print(f"fitted in {time.time()-t0:.1f}s; SMBO cost history: "
+          f"{[round(y, 2) for _, y in db.fit_result.history]}")
+    print(db)
 
-    print("building LMSFC (heuristic cost-based paging + per-page sort dims "
-          "+ PGM forward index)...")
-    idx = LMSFCIndex.build(data, theta=res.theta_best,
-                           cfg=IndexConfig(paging="heuristic"),
-                           workload=(Ls_tr, Us_tr), K=K)
-    zm = build_zm_index(data, K=K)
-
-    counts, stats = run_workload(idx, Ls_te, Us_te)
-    _, zstats = run_workload(zm, Ls_te, Us_te)
+    res = db.query((Ls_te, Us_te))          # CPU engine attaches by default
     oracle = np.asarray([brute_force_count(data, l, u)
                          for l, u in zip(Ls_te, Us_te)])
-    assert np.array_equal(counts, oracle), "exactness violated!"
-    print(f"exact on {len(counts)} queries ✓")
+    assert np.array_equal(res.counts, oracle), "exactness violated!"
+    assert res.exact
+    print(f"exact on {len(res)} queries ✓ (engine={res.engine})")
+
+    zm = build_zm_index(data, K=K)
+    _, zstats = run_workload(zm, Ls_te, Us_te)
+    stats = res.stats
     print(f"LMSFC:    pages/query={stats.pages_accessed/200:.1f}  "
           f"false-positive points/query={stats.false_positives/200:.1f}")
     print(f"ZM-index: pages/query={zstats.pages_accessed/200:.1f}  "
           f"false-positive points/query={zstats.false_positives/200:.1f}")
     print(f"page-access reduction: "
           f"{zstats.pages_accessed/max(1, stats.pages_accessed):.2f}x")
+
+    print("LMSFCb updates: insert 100 rows, tombstone one...")
+    rng = np.random.default_rng(7)
+    new = np.unique(rng.integers(0, 2**K, size=(100, 2), dtype=np.uint64),
+                    axis=0)
+    db.insert(new)
+    db.delete(data[0])
+    res2 = db.query((Ls_te, Us_te))
+    assert res2.exact
+    print(f"post-update queries still exact ✓ (epoch={res2.epoch}, "
+          f"live rows={db.n})")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,13 @@
-"""End-to-end serving driver (the paper's kind of system): build an LMSFC
-index, range-shard its pages over a device mesh, and serve batched window-
-query requests with the TPU-vectorized engine (split -> prune -> compact ->
-gather -> filter, psum-reduced counts).
+"""End-to-end serving driver (the paper's kind of system), on the
+`repro.api.Database` facade: fit an LMSFC index (SMBO θ + build), attach
+the "distributed" engine (pages range-sharded over a device mesh,
+psum-reduced counts), and serve batched window-query requests — exact by
+construction, overflow-escalated automatically.
 
     PYTHONPATH=src python examples/serve_distributed.py [--devices 8]
 """
 import argparse
 import os
-import sys
 
 
 def main():
@@ -24,15 +24,11 @@ def main():
     import time
 
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
-    from repro.core.index import IndexConfig, LMSFCIndex
+    from repro.api import Database, EngineConfig
+    from repro.core.index import IndexConfig
     from repro.core.query import brute_force_count
-    from repro.core.serve import (build_serving_arrays,
-                                  make_distributed_query_fn,
-                                  shard_serving_arrays)
-    from repro.core.smbo import learn_sfc
     from repro.core.theta import default_K
     from repro.data.synth import make_dataset
     from repro.data.workload import make_workload
@@ -40,42 +36,34 @@ def main():
     data = make_dataset("osm", args.n, seed=0)
     K = default_K(2)
     Ls_tr, Us_tr = make_workload(data, 80, seed=1, K=K)
-    rng = np.random.default_rng(0)
-    res = learn_sfc(data[rng.choice(len(data), 3000, replace=False)],
-                    Ls_tr, Us_tr, K=K, max_iters=3, n_init=5,
-                    evals_per_iter=2)
-    idx = LMSFCIndex.build(data, theta=res.theta_best,
-                           cfg=IndexConfig(paging="heuristic"),
-                           workload=(Ls_tr, Us_tr), K=K)
+    db = Database.fit(data, (Ls_tr, Us_tr), K=K,
+                      cfg=IndexConfig(paging="heuristic"),
+                      smbo=dict(max_iters=3, n_init=5, evals_per_iter=2))
 
     d, m = (args.devices // 2, 2) if args.devices > 1 else (1, 1)
     mesh = jax.make_mesh((d, m), ("data", "model"))
-    arrays = shard_serving_arrays(
-        build_serving_arrays(idx, pad_pages_to=args.devices), mesh)
-    qfn, _ = make_distributed_query_fn(res.theta_best, mesh,
-                                       max_cand=256, q_chunk=16)
-    print(f"serving on {args.devices} devices, {idx.num_pages} pages "
-          f"(~{idx.num_pages // args.devices}/device)")
+    db.engine("distributed", EngineConfig(mesh=mesh, max_cand=256,
+                                          q_chunk=16))
+    print(f"serving on {args.devices} devices, {db.num_pages} pages "
+          f"(~{db.num_pages // args.devices}/device)")
 
     total_q = 0
     total_t = 0.0
     for b in range(args.batches):
         Ls, Us = make_workload(data, args.qbatch, seed=100 + b, K=K)
-        q = jnp.asarray(np.stack([Ls, Us], -1).astype(np.uint32).view(np.int32))
         t0 = time.perf_counter()
-        counts, over = qfn(arrays, q)
-        counts.block_until_ready()
+        res = db.query((Ls, Us))
         dt = time.perf_counter() - t0
         if b == 0:  # verify exactness on the first batch (compile excluded)
             want = np.asarray([brute_force_count(data, l, u)
                                for l, u in zip(Ls, Us)])
-            assert np.array_equal(np.asarray(counts), want)
+            assert np.array_equal(res.counts, want) and res.exact
             print("exactness check on first batch ✓")
             continue
         total_q += args.qbatch
         total_t += dt
         print(f"batch {b}: {args.qbatch} queries in {dt*1e3:.1f} ms "
-              f"({args.qbatch/dt:.0f} q/s)")
+              f"({args.qbatch/dt:.0f} q/s, escalations={res.escalations})")
     print(f"steady-state throughput: {total_q/total_t:.0f} queries/s")
 
 

@@ -1,0 +1,250 @@
+"""`Database` — the paper's whole lifecycle behind one object.
+
+    learn θ (SMBO)  →  build (LMSFCIndex)  →  query (any engine)
+         →  insert/delete (LMSFCb DeltaStore)  →  refresh / rebuild (LMSFCa)
+
+Quickstart::
+
+    from repro.api import Database, EngineConfig
+
+    db = Database.fit(data, workload=(Ls, Us))          # SMBO θ + build
+    res = db.query(Ls_test, Us_test)                    # CPU engine, exact
+    db.engine("xla", EngineConfig(max_cand=128))        # attach TPU path
+    res = db.query(Ls_test, Us_test)                    # same counts
+    db.insert([x, y]); db.delete(old_row)               # LMSFCb deltas
+    res = db.query(Ls_test, Us_test)                    # auto-refresh, exact
+
+Every engine is **exact by construction**: queries whose candidate-page
+set overflows `max_cand` are automatically escalated (retried with a
+doubled bound, with a final CPU fallback), so `QueryResult.counts` can be
+trusted regardless of the engine or its tuning.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.index import IndexConfig, LMSFCIndex
+from ..core.query import QueryStats, query_count
+from ..core.theta import Theta, default_K
+from .deltas import DeltaStore, get_delta_store
+from .engines import make_engine
+from .policy import FractionRebuildPolicy, RebuildPolicy
+from .result import EngineConfig, QueryResult
+
+
+def _learn_theta(data, workload, K, smbo=None, sample=3000, seed=0):
+    """Sample the data and run SMBO θ-learning (shared by fit/rebuild)."""
+    from ..core.smbo import learn_sfc         # heavy import, lazy
+    Ls, Us = workload
+    rng = np.random.default_rng(seed)
+    samp = data[rng.choice(len(data), min(sample, len(data)), replace=False)]
+    kw = dict(max_iters=3, n_init=5, evals_per_iter=2)
+    kw.update(smbo or {})
+    return learn_sfc(samp, np.asarray(Ls), np.asarray(Us), K=K, **kw)
+
+
+def _norm_rects(rects, U=None):
+    """Accept (Ls, Us) pairs, a (Q, d, 2) rect array, or a single (qL, qU)."""
+    if U is not None:
+        Ls, Us = rects, U
+    elif isinstance(rects, tuple) and len(rects) == 2:
+        Ls, Us = rects
+    else:
+        r = np.asarray(rects, dtype=np.uint64)
+        Ls, Us = r[..., 0], r[..., 1]
+    Ls = np.atleast_2d(np.asarray(Ls, dtype=np.uint64))
+    Us = np.atleast_2d(np.asarray(Us, dtype=np.uint64))
+    return Ls, Us
+
+
+class Database:
+    """Facade over index construction, query engines, and updates."""
+
+    def __init__(self, index: LMSFCIndex, *, policy: RebuildPolicy = None,
+                 workload=None):
+        self.index = index
+        self.policy = policy or FractionRebuildPolicy()
+        self.workload = workload
+        self.rebuild_pending = False
+        self.fit_result = None          # SMBOResult when θ was learned
+        self._engines = {}
+        self._active = None
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def fit(cls, data, workload=None, *, cfg: IndexConfig = None,
+            K: int = None, theta: Theta = None, learn: bool = True,
+            sample: int = 3000, smbo: dict = None,
+            policy: RebuildPolicy = None, seed: int = 0) -> "Database":
+        """SMBO θ-learning (when a training workload is given) + build.
+
+        `workload` is the ``(Ls, Us)`` training workload; without it (or
+        with ``learn=False``) the index is built on the given/z-order θ.
+        `smbo` forwards kwargs to :func:`repro.core.smbo.learn_sfc`.
+        """
+        data = np.asarray(data, dtype=np.uint64)
+        d = data.shape[1]
+        K = K or default_K(d)
+        fit_result = None
+        if theta is None and learn and workload is not None:
+            fit_result = _learn_theta(data, workload, K, smbo=smbo,
+                                      sample=sample, seed=seed)
+            theta = fit_result.theta_best
+        index = LMSFCIndex.build(data, theta=theta, cfg=cfg,
+                                 workload=workload, K=K)
+        db = cls(index, policy=policy, workload=workload)
+        db.fit_result = fit_result
+        return db
+
+    # ------------------------------------------------------------------
+    # engines
+    # ------------------------------------------------------------------
+    def engine(self, name: str, config: EngineConfig = None) -> "Database":
+        """Attach (or re-attach with a new config) an execution engine and
+        make it the default for `query`.  Chainable."""
+        self._engines[name] = make_engine(name, self, config)
+        self._active = name
+        return self
+
+    @property
+    def active_engine(self) -> str:
+        return self._active
+
+    @property
+    def engines(self) -> dict:
+        return dict(self._engines)
+
+    def _get_engine(self, name: str = None):
+        """Resolve a per-call engine override without changing the active
+        engine (attaching with a default config on first use)."""
+        name = name or self._active or "cpu"
+        if name not in self._engines:
+            self._engines[name] = make_engine(name, self, EngineConfig())
+        if self._active is None:
+            self._active = name
+        return name, self._engines[name]
+
+    # ------------------------------------------------------------------
+    # query (exact by construction on every engine)
+    # ------------------------------------------------------------------
+    def query(self, rects, U=None, *, engine: str = None) -> QueryResult:
+        """COUNT(*) for a batch of window queries.
+
+        `rects` is ``(Ls, Us)``, a ``(Q, d, 2)`` uint64 array, or a single
+        ``(qL, qU)``; `engine` overrides the active engine for this call.
+        """
+        Ls, Us = _norm_rects(rects, U)
+        name, eng = self._get_engine(engine)
+        eng.sync(eng.cfg.on_stale)
+        counts, over, stats = eng.run(Ls, Us)
+        first_over = over.copy()
+        rounds = 0
+        fallbacks = 0
+        if over.any() and eng.cfg.escalate:
+            max_cand = eng.cfg.max_cand
+            bound = eng.overflow_free_cand
+            while over.any() and max_cand < bound:
+                max_cand = min(2 * max_cand, bound)
+                idx = np.nonzero(over)[0]
+                c2, o2, _ = eng.run(Ls[idx], Us[idx], max_cand=max_cand)
+                counts = counts.copy()
+                counts[idx] = c2
+                over = np.zeros_like(over)
+                over[idx] = o2
+                rounds += 1
+        if over.any() and eng.cfg.cpu_fallback:
+            counts = counts.copy()
+            for i in np.nonzero(over)[0]:
+                counts[i] = query_count(self.index, Ls[i], Us[i]).result
+                fallbacks += 1
+            over = np.zeros_like(over)
+        if stats is None:
+            stats = QueryStats(result=int(counts.sum()), subqueries=len(Ls))
+        return QueryResult(counts=counts, engine=name, epoch=self.store.epoch,
+                           stats=stats, overflowed=first_over,
+                           residual_overflow=over, escalations=rounds,
+                           cpu_fallbacks=fallbacks)
+
+    # ------------------------------------------------------------------
+    # updates (LMSFCb deltas + LMSFCa rebuild)
+    # ------------------------------------------------------------------
+    @property
+    def store(self) -> DeltaStore:
+        return get_delta_store(self.index)
+
+    def insert(self, x) -> int:
+        """Insert one row (or an iterable of rows, batch-encoded); returns
+        the last page id touched.  May trigger the rebuild policy."""
+        x = np.asarray(x, dtype=np.uint64)
+        if x.ndim == 1:
+            x = x[None]
+        pages = self.store.insert_many(x)
+        self._after_mutation()
+        return int(pages[-1]) if len(pages) else -1
+
+    def delete(self, x) -> None:
+        """Tombstone one row (or an iterable of rows)."""
+        x = np.asarray(x, dtype=np.uint64)
+        if x.ndim == 1:
+            x = x[None]
+        store = self.store
+        for row in x:
+            store.delete(row)
+        self._after_mutation()
+
+    def _after_mutation(self) -> None:
+        if self.policy.should_rebuild(self.index, self.store):
+            if self.policy.auto:
+                self.rebuild()
+            else:
+                self.rebuild_pending = True
+
+    def refresh(self, engine: str = None) -> "Database":
+        """Re-pack dirty pages into the device arrays of the named (or all
+        attached) device engines."""
+        targets = [engine] if engine else list(self._engines)
+        for name in targets:
+            self._engines[name].sync("refresh")
+        return self
+
+    def rebuild(self, *, workload=None, relearn: bool = False,
+                smbo: dict = None, sample: int = 3000,
+                seed: int = 0) -> "Database":
+        """LMSFCa maintenance: merge deltas, drop tombstones, rebuild the
+        index (optionally re-learning θ), and invalidate every engine."""
+        data = self.store.merged_data()
+        wl = workload if workload is not None else self.workload
+        theta = self.index.theta
+        if relearn and wl is not None:
+            self.fit_result = _learn_theta(data, wl, self.index.K, smbo=smbo,
+                                           sample=sample, seed=seed)
+            theta = self.fit_result.theta_best
+        self.index = LMSFCIndex.build(data, theta=theta, cfg=self.index.cfg,
+                                      workload=wl, K=self.index.K)
+        self.rebuild_pending = False
+        for eng in self._engines.values():
+            eng.invalidate()
+        return self
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        """Live logical row count (base + inserts − deletes)."""
+        return self.index.n + self.store.n_inserted - self.store.n_deleted
+
+    @property
+    def d(self) -> int:
+        return self.index.d
+
+    @property
+    def num_pages(self) -> int:
+        return self.index.num_pages
+
+    def __repr__(self) -> str:
+        return (f"Database(n={self.index.n}, d={self.d}, "
+                f"pages={self.num_pages}, epoch={self.store.epoch}, "
+                f"engines={sorted(self._engines)}, active={self._active!r})")

@@ -1,0 +1,280 @@
+"""Execution engines behind `Database.query`, unified under one registry.
+
+Every engine consumes uint64 query rectangles and produces
+``(counts, overflow, stats)`` in host numpy; `Database` layers the
+exactness policy (overflow escalation + CPU fallback) and staleness
+policy (DeltaStore epoch vs the engine's packed arrays) on top.
+
+  cpu          — the faithful per-query engine (core/query.py); always
+                 reads the live index + DeltaStore, never stale, never
+                 overflows.
+  xla          — single-shard batched engine (core/serve.py) with the
+                 XLA window filter.
+  pallas       — same engine with the Pallas TPU window-filter kernel
+                 (set ``EngineConfig(interpret=True)`` to run it on CPU).
+  distributed  — page-sharded shard_map engine over a device mesh,
+                 psum-reduced counts.
+
+Device engines keep a host-side copy of their `ServingArrays` plus the
+DeltaStore epoch they were packed at; `sync()` re-packs only the pages
+dirtied since that epoch (growing the point capacity when a delta page
+overflows it) and re-uploads.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.query import QueryStats, query_count
+from ..core.serve import (make_distributed_query_fn, make_query_fn,
+                          pack_serving_arrays, shard_serving_arrays)
+from ..core.zorder64 import u64_to_z64
+from .result import EngineConfig
+
+_ENGINES = {}
+
+
+class StaleServingError(RuntimeError):
+    """Device serving arrays predate the DeltaStore epoch and the engine
+    was configured with ``on_stale='error'``."""
+
+
+def register_engine(name: str):
+    def deco(cls):
+        _ENGINES[name] = cls
+        cls.name = name
+        return cls
+    return deco
+
+
+def engine_names() -> list:
+    return sorted(_ENGINES)
+
+
+def make_engine(name: str, db, config: EngineConfig = None):
+    if name not in _ENGINES:
+        raise KeyError(f"unknown engine {name!r}; registered: {engine_names()}")
+    return _ENGINES[name](db, config or EngineConfig())
+
+
+class BaseEngine:
+    """Interface: run a uint64 rect batch, report staleness, invalidate."""
+
+    name = "?"
+
+    def __init__(self, db, cfg: EngineConfig):
+        self.db = db
+        self.cfg = cfg
+
+    # -- lifecycle ---------------------------------------------------------
+    def sync(self, on_stale: str = "refresh") -> None:
+        """Bring engine state up to the DeltaStore epoch (no-op on CPU)."""
+
+    def invalidate(self) -> None:
+        """Drop all packed/compiled state (after an index rebuild)."""
+
+    # -- execution ---------------------------------------------------------
+    @property
+    def overflow_free_cand(self) -> int:
+        """A max_cand at/above which candidate overflow cannot occur."""
+        return 0
+
+    def run(self, Ls, Us, max_cand: int = None):
+        """(Q, d) uint64 bounds -> (counts int64, overflow int32, stats)."""
+        raise NotImplementedError
+
+
+@register_engine("cpu")
+class CpuEngine(BaseEngine):
+    """Per-query CPU engine; exact by construction, delta-aware, stat-rich."""
+
+    def run(self, Ls, Us, max_cand=None):
+        stats = QueryStats()
+        counts = np.zeros(len(Ls), dtype=np.int64)
+        for i, (qL, qU) in enumerate(zip(Ls, Us)):
+            st = query_count(self.db.index, qL, qU)
+            counts[i] = st.result
+            stats.merge(st)
+        return counts, np.zeros(len(Ls), dtype=np.int32), stats
+
+
+class _DeviceEngine(BaseEngine):
+    """Shared machinery for the single-shard and distributed engines."""
+
+    default_backend = "xla"
+
+    def __init__(self, db, cfg):
+        super().__init__(db, cfg)
+        self._host = None        # numpy ServingArrays (pack source of truth)
+        self._arrays = None      # device ServingArrays
+        self._qfns = {}          # max_cand -> compiled query fn
+        self.built_epoch = -1
+
+    # -- config ------------------------------------------------------------
+    @property
+    def backend(self) -> str:
+        return self.cfg.backend or self.default_backend
+
+    @property
+    def pad_pages_to(self) -> int:
+        return self.cfg.pad_pages_to or 1
+
+    # -- lifecycle ---------------------------------------------------------
+    def invalidate(self):
+        self._host = None
+        self._arrays = None
+        self._qfns.clear()
+        self.built_epoch = -1
+
+    def sync(self, on_stale: str = "refresh"):
+        store = self.db.store
+        if self._host is None:
+            # first pack is a build, not a stale serve: fold in any deltas
+            # accumulated before the engine attached, whatever the policy
+            self._host = pack_serving_arrays(
+                self.db.index, pad_pages_to=self.pad_pages_to, cap=self.cfg.cap)
+            self.built_epoch = 0
+            self._repack_dirty(store)
+            self.built_epoch = store.epoch
+            self._upload()
+            return
+        if self.built_epoch >= store.epoch:
+            if self._arrays is None:
+                self._upload()
+            return
+        if on_stale == "serve_stale":
+            if self._arrays is None:
+                self._upload()
+            return
+        if on_stale == "error":
+            raise StaleServingError(
+                f"{self.name} arrays at epoch {self.built_epoch} < store "
+                f"epoch {store.epoch}; call refresh() or use "
+                f"on_stale='refresh'")
+        self._repack_dirty(store)
+        self.built_epoch = store.epoch
+        self._upload()
+
+    def _repack_dirty(self, store):
+        """Re-pack only the pages dirtied since `built_epoch` into the host
+        arrays, growing the point capacity when a delta page overflows it."""
+        index = self.db.index
+        dirty = store.dirty_since(self.built_epoch)
+        if not dirty:
+            return
+        live = {p: store.live_page_rows(p) for p in dirty}
+        cap = self._host.points.shape[2]
+        need = max(len(r) for r in live.values())
+        if need > cap:
+            # capacity overflow: full repack at the grown cap.  The fresh
+            # pack holds only base rows, so EVERY page ever mutated (not
+            # just the ones dirty since built_epoch) must be re-applied,
+            # else earlier-folded deltas/tombstones would silently revert.
+            grown = max(need, 2 * cap)
+            self._host = pack_serving_arrays(
+                index, pad_pages_to=self.pad_pages_to, cap=grown)
+            self._qfns.clear()          # cap is a static shape
+            dirty = store.dirty_since(0)
+            live = {p: store.live_page_rows(p) for p in dirty}
+        h = self._host
+        pts_u32 = h.points.view(np.uint32)
+        mbr_u32 = h.page_mbr.view(np.uint32)
+        for p, rows in live.items():
+            k = len(rows)
+            pts_u32[p] = 0
+            pts_u32[p, :, :k] = rows.astype(np.uint32).T
+            h.page_size[p] = k
+            mbr_u32[p] = index.mbrs[p].astype(np.uint32)
+            h.page_zmin[p] = u64_to_z64(index.page_zmin[p:p + 1])[0]
+            h.page_zmax[p] = u64_to_z64(index.page_zmax[p:p + 1])[0]
+
+    def _upload(self):
+        import jax.numpy as jnp
+        import jax
+        self._arrays = jax.tree.map(jnp.asarray, self._host)
+
+    # -- execution ---------------------------------------------------------
+    @property
+    def overflow_free_cand(self) -> int:
+        if self._host is None:
+            self.sync()
+        return int(self._host.page_size.shape[0])
+
+    def _qfn(self, max_cand: int):
+        raise NotImplementedError
+
+    def run(self, Ls, Us, max_cand=None):
+        import jax.numpy as jnp
+        if self._arrays is None:
+            self.sync()
+        Q = len(Ls)
+        qc = self.cfg.q_chunk
+        Qp = -(-Q // qc) * qc
+        rect = np.stack([Ls, Us], axis=-1).astype(np.uint32)   # (Q, d, 2)
+        if Qp != Q:
+            rect = np.concatenate([rect, np.repeat(rect[-1:], Qp - Q, axis=0)])
+        q = jnp.asarray(rect.view(np.int32))
+        fn = self._qfns.get(max_cand or self.cfg.max_cand)
+        if fn is None:
+            fn = self._qfn(max_cand or self.cfg.max_cand)
+            self._qfns[max_cand or self.cfg.max_cand] = fn
+        counts, over = fn(self._arrays, q)
+        return (np.asarray(counts)[:Q].astype(np.int64),
+                np.asarray(over)[:Q].astype(np.int32), None)
+
+
+@register_engine("xla")
+class XlaEngine(_DeviceEngine):
+    """Single-shard batched engine, XLA window filter."""
+
+    default_backend = "xla"
+
+    def _qfn(self, max_cand):
+        import jax
+        return jax.jit(make_query_fn(
+            self.db.index.theta, k_maxsplit=self.cfg.k_maxsplit,
+            max_cand=max_cand, q_chunk=self.cfg.q_chunk,
+            backend=self.backend, interpret=self.cfg.interpret))
+
+
+@register_engine("pallas")
+class PallasEngine(XlaEngine):
+    """Single-shard batched engine, Pallas TPU window-filter kernel."""
+
+    default_backend = "pallas"
+
+
+@register_engine("distributed")
+class DistributedEngine(_DeviceEngine):
+    """Page-sharded shard_map engine; counts/overflow psum-reduced."""
+
+    default_backend = "xla"
+
+    def __init__(self, db, cfg):
+        super().__init__(db, cfg)
+        self._mesh = None
+
+    @property
+    def mesh(self):
+        if self.cfg.mesh is not None:
+            return self.cfg.mesh
+        if self._mesh is None:
+            import jax
+            self._mesh = jax.make_mesh((jax.device_count(),), ("pages",))
+        return self._mesh
+
+    @property
+    def pad_pages_to(self) -> int:
+        if self.cfg.pad_pages_to:
+            return self.cfg.pad_pages_to
+        return int(np.prod(list(self.mesh.shape.values())))
+
+    def _upload(self):
+        self._arrays = shard_serving_arrays(self._host, self.mesh)
+
+    def _qfn(self, max_cand):
+        import jax
+        fn, _ = make_distributed_query_fn(
+            self.db.index.theta, self.mesh, k_maxsplit=self.cfg.k_maxsplit,
+            max_cand=max_cand, q_chunk=self.cfg.q_chunk,
+            backend=self.backend, interpret=self.cfg.interpret)
+        return jax.jit(fn)

@@ -1,0 +1,69 @@
+"""The unified query surface shared by every engine.
+
+`EngineConfig` carries the knobs that used to be re-threaded by hand at
+every `make_query_fn` / `make_distributed_query_fn` call site, plus the
+exactness policy (overflow escalation, staleness handling).
+
+`QueryResult` unifies what the engines used to return in different shapes
+(the CPU engine's `QueryStats` vs the device engines' bare
+``(counts, overflow)`` tuples): exact counts, aggregate mechanical stats,
+and full overflow accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from ..core.query import QueryStats
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Execution knobs for one attached engine."""
+
+    k_maxsplit: int = 4        # recursive query splitting depth (§6.1)
+    max_cand: int = 64         # initial per-query candidate-page bound
+    q_chunk: int = 16          # lax.map chunk; queries are padded to a multiple
+    backend: str = None        # window-filter kernel: 'xla' | 'pallas'
+                               #   (defaults per engine; the 'pallas' engine
+                               #    flips this to 'pallas')
+    interpret: bool = False    # run the Pallas kernel in interpret mode (CPU)
+    mesh: Any = None           # distributed only; default: 1-axis mesh over
+                               #   all visible devices
+    pad_pages_to: int = None   # page-count padding (defaults: 1, or mesh size)
+    cap: int = None            # per-page point capacity (default: max page)
+    escalate: bool = True      # retry overflowed queries with doubled max_cand
+    cpu_fallback: bool = True  # final exactness net if escalation is exhausted
+    on_stale: str = "refresh"  # when device arrays predate the DeltaStore
+                               #   epoch: 'refresh' | 'error' | 'serve_stale'
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """What `Database.query` returns, identically shaped for every engine."""
+
+    counts: np.ndarray         # (Q,) int64 — exact window-query counts
+    engine: str                # engine name that served the batch
+    epoch: int                 # DeltaStore epoch the batch was served at
+    stats: QueryStats          # aggregate mechanical stats (complete on the
+                               #   CPU engine; device engines fill `result`)
+    overflowed: np.ndarray     # (Q,) int32 first-pass overflow events
+                               #   (shard-additive on the distributed engine)
+    residual_overflow: np.ndarray = None  # (Q,) after escalation; all-zero
+                                          #   unless escalation was disabled
+    escalations: int = 0       # doubled-max_cand retry rounds that ran
+    cpu_fallbacks: int = 0     # queries resolved by the CPU exactness net
+
+    def __post_init__(self):
+        if self.residual_overflow is None:
+            self.residual_overflow = np.zeros_like(self.overflowed)
+
+    @property
+    def exact(self) -> bool:
+        """True when every count is exact by construction."""
+        return not np.any(self.residual_overflow)
+
+    def __len__(self) -> int:
+        return len(self.counts)

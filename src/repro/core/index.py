@@ -105,70 +105,53 @@ class LMSFCIndex:
 
 # ---------------------------------------------------------------------------
 # updates (paper §7.11): delta pages (LMSFCb) + tombstones + rebuild (LMSFCa)
+#
+# Update state lives in an explicit `repro.api.deltas.DeltaStore` (with a
+# staleness epoch that serving engines check); the free functions below are
+# thin deprecation shims kept so pre-facade call sites stay importable.
+# Prefer `repro.api.Database.insert/delete/rebuild`.
 # ---------------------------------------------------------------------------
 
 
+def _store(index: "LMSFCIndex"):
+    from ..api.deltas import get_delta_store  # lazy: api imports core
+    return get_delta_store(index)
+
+
 def _ensure_update_state(index: "LMSFCIndex"):
-    if not hasattr(index, "_deltas"):
-        index._deltas = {}          # page -> list[np.ndarray row]
-        index._tombstones = set()   # tuples of coords
-        index._n_inserted = 0
+    _store(index)
 
 
 def insert(index: "LMSFCIndex", x) -> int:
     """LMSFCb-style insertion: append to the target page's unsorted delta
     array (located via the learned forward index); queries scan deltas.
     Returns the page id."""
-    _ensure_update_state(index)
-    x = np.asarray(x, dtype=np.uint64)
-    z = encode_np(x[None], index.theta)[0]
-    p = int(index.page_of(z)[0])
-    index._deltas.setdefault(p, []).append(x)
-    index._n_inserted += 1
-    # keep page metadata usable: grow the MBR to cover the delta
-    index.mbrs[p, :, 0] = np.minimum(index.mbrs[p, :, 0], x.astype(np.int64))
-    index.mbrs[p, :, 1] = np.maximum(index.mbrs[p, :, 1], x.astype(np.int64))
+    store = _store(index)
+    p = store.insert(x)
+    index._n_inserted = store.n_inserted   # legacy mirror
     return p
 
 
 def delete(index: "LMSFCIndex", x) -> None:
     """Tombstone deletion (paper: 'mark a record as deleted')."""
-    _ensure_update_state(index)
-    index._tombstones.add(tuple(int(v) for v in np.asarray(x)))
+    _store(index).delete(x)
 
 
 def delta_count(index: "LMSFCIndex", p: int, qL, qU) -> int:
     """Extra matches from page p's delta array (minus tombstones)."""
-    if not hasattr(index, "_deltas") or p not in index._deltas:
+    if not hasattr(index, "_delta_store"):
         return 0
-    rows = np.stack(index._deltas[p])
-    ok = np.all((rows >= qL) & (rows <= qU), axis=1)
-    cnt = int(ok.sum())
-    if index._tombstones:
-        for r in rows[ok]:
-            if tuple(int(v) for v in r) in index._tombstones:
-                cnt -= 1
-    return cnt
+    return _store(index).delta_count(p, qL, qU)
 
 
 def needs_rebuild(index: "LMSFCIndex", frac: float = 0.1) -> bool:
-    _ensure_update_state(index)
-    return index._n_inserted > frac * index.n
+    return _store(index).n_inserted > frac * index.n
 
 
 def rebuild(index: "LMSFCIndex", workload=None) -> "LMSFCIndex":
-    """Merge deltas, drop tombstones, rebuild paging/sort-dims/PGM (the
-    paper's LMSFCa periodic maintenance; callers may re-run learn_sfc for a
-    fresh θ before calling this)."""
-    _ensure_update_state(index)
-    parts = [index.xs]
-    for rows in index._deltas.values():
-        parts.append(np.stack(rows))
-    data = np.concatenate(parts)
-    if index._tombstones:
-        keep = np.asarray([tuple(int(v) for v in r) not in index._tombstones
-                           for r in data])
-        data = data[keep]
-    data = np.unique(data, axis=0)
+    """Merge deltas, drop tombstones (vectorized row-set membership),
+    rebuild paging/sort-dims/PGM (the paper's LMSFCa periodic maintenance;
+    callers may re-run learn_sfc for a fresh θ before calling this)."""
+    data = _store(index).merged_data()
     return LMSFCIndex.build(data, theta=index.theta, cfg=index.cfg,
                             workload=workload, K=index.K)

@@ -6,7 +6,10 @@ skipping, MBR disjoint/containment short-cuts, and per-page sort-dimension
 refinement.  Returns COUNT aggregates plus the mechanical statistics that the
 paper reports (pages accessed, false-positive points, index accesses).
 
-The TPU-vectorized engine lives in serve.py (mask→compact→gather→filter).
+This is the execution layer behind the "cpu" engine of the
+`repro.api.Database` facade — prefer `Database.query`, which wraps it in
+the unified `QueryResult` surface.  The TPU-vectorized engine lives in
+serve.py (mask→compact→gather→filter).
 """
 from __future__ import annotations
 
@@ -95,21 +98,11 @@ def query_count(index: LMSFCIndex, qL, qU) -> QueryStats:
     total = 0
     for p in sorted(pages):
         total += _scan_page(index, p, qL, qU, stats)
-    # updates (paper §7.11): unsorted per-page delta arrays + tombstones
-    if getattr(index, "_deltas", None) or getattr(index, "_tombstones", None):
-        from .index import delta_count
-        base_del = 0
-        if index._tombstones:
-            for t in index._tombstones:
-                ta = np.asarray(t, np.uint64)
-                if np.all(ta >= qL) and np.all(ta <= qU):
-                    # deleted base records (tombstones for delta rows are
-                    # handled inside delta_count)
-                    if int(np.all((index.xs == ta), axis=1).sum()):
-                        base_del += 1
-        for p in sorted(pages):
-            total += delta_count(index, p, qL, qU)
-        total -= base_del
+    # updates (paper §7.11): unsorted per-page delta arrays + tombstones,
+    # held in the index's DeltaStore (repro.api.deltas)
+    store = getattr(index, "_delta_store", None)
+    if store is not None and (store.deltas or store.tombstones):
+        total += store.count_adjustment(sorted(pages), qL, qU)
     stats.result = total
     return stats
 

@@ -1,5 +1,12 @@
 """TPU-vectorized distributed window-query serving (DESIGN.md §2).
 
+Prefer the `repro.api.Database` facade over calling this module directly:
+it owns the engine lifecycle (serving-array packing + delta refresh),
+threads `k_maxsplit`/`max_cand`/`q_chunk`/`backend` through one
+`EngineConfig`, and escalates overflowed queries so counts are exact by
+construction.  This module remains the execution layer underneath the
+"xla", "pallas", and "distributed" engines.
+
 The paper's per-query page walk is re-expressed as a static-shape pipeline:
 
   split      — recursive query splitting (§6.1), vectorized over (Q, 2^k)
@@ -57,20 +64,41 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
-def build_serving_arrays(index: LMSFCIndex, pad_pages_to: int = 1,
-                         cap: int = None) -> ServingArrays:
-    """Materialize padded page-major arrays from a built index."""
+def pack_serving_arrays(index: LMSFCIndex, pad_pages_to: int = 1,
+                        cap: int = None) -> ServingArrays:
+    """Materialize padded page-major **host** (numpy) arrays from a built
+    index.  Small-page regimes (large page counts) pack via one bulk flat
+    scatter per dimension instead of a Python loop over pages — the loop
+    used to dominate engine startup there; with few large pages the
+    per-page block copy is pure memcpy and stays the faster path."""
     Pn = index.num_pages
     d = index.d
-    cap = cap or int(np.diff(index.starts).max())
+    sizes = np.diff(index.starts).astype(np.int64)
+    max_size = int(sizes.max())
+    cap = cap or max_size
+    if cap < max_size:
+        raise ValueError(f"cap={cap} < largest page ({max_size} rows); "
+                         f"points would be dropped")
     P_pad = -(-Pn // pad_pages_to) * pad_pages_to
     pts = np.zeros((P_pad, d, cap), dtype=np.uint32)
     size = np.zeros(P_pad, dtype=np.int32)
-    for p in range(Pn):
-        s, e = index.starts[p], index.starts[p + 1]
-        seg = index.xs[s:e].astype(np.uint32)
-        pts[p, :, :e - s] = seg.T
-        size[p] = e - s
+    size[:Pn] = sizes
+    if index.n < 128 * Pn:          # measured crossover: ~100 rows/page
+        # bulk scatter: row r of page p, dim i lands at
+        # pts[p, i, slot] == flat[p*d*cap + i*cap + slot]; destinations
+        # are piecewise contiguous, so each per-dim scatter streams
+        page_of_row = np.repeat(np.arange(Pn, dtype=np.int64), sizes)
+        slot_of_row = (np.arange(index.n, dtype=np.int64)
+                       - np.repeat(index.starts[:-1].astype(np.int64), sizes))
+        flat = pts.reshape(-1)
+        base = page_of_row * (d * cap) + slot_of_row
+        xs32 = index.xs.astype(np.uint32)
+        for i in range(d):
+            flat[base + i * cap] = xs32[:, i]
+    else:
+        for p in range(Pn):
+            s, e = index.starts[p], index.starts[p + 1]
+            pts[p, :, :e - s] = index.xs[s:e].astype(np.uint32).T
     mbr = np.zeros((P_pad, d, 2), dtype=np.uint32)
     mbr[:Pn] = index.mbrs.astype(np.uint32)
     # padded pages: impossible MBR (lo > hi) so they never match
@@ -80,12 +108,19 @@ def build_serving_arrays(index: LMSFCIndex, pad_pages_to: int = 1,
     zmin[:Pn] = u64_to_z64(index.page_zmin)
     zmax[:Pn] = u64_to_z64(index.page_zmax)
     return ServingArrays(
-        points=jnp.asarray(pts.view(np.int32)),
-        page_zmin=jnp.asarray(zmin),
-        page_zmax=jnp.asarray(zmax),
-        page_mbr=jnp.asarray(mbr.view(np.int32)),
-        page_size=jnp.asarray(size),
+        points=pts.view(np.int32),
+        page_zmin=zmin,
+        page_zmax=zmax,
+        page_mbr=mbr.view(np.int32),
+        page_size=size,
     )
+
+
+def build_serving_arrays(index: LMSFCIndex, pad_pages_to: int = 1,
+                         cap: int = None) -> ServingArrays:
+    """Padded page-major device arrays from a built index."""
+    host = pack_serving_arrays(index, pad_pages_to=pad_pages_to, cap=cap)
+    return jax.tree.map(jnp.asarray, host)
 
 
 # ---------------------------------------------------------------------------
@@ -100,7 +135,8 @@ def _u32_le(a, b):
 
 
 def make_query_fn(theta: Theta, *, k_maxsplit: int = 4, max_cand: int = 64,
-                  q_chunk: int = 16, backend: str = "xla"):
+                  q_chunk: int = 16, backend: str = "xla",
+                  interpret: bool = False):
     """Returns query_batch(arrays, queries (Q, d, 2) int32) -> (counts (Q,),
     overflowed (Q,) int32 overflow counts — 0/1 on a single shard, psum-
     additive across shards in the distributed engine).  Static shapes
@@ -147,7 +183,8 @@ def make_query_fn(theta: Theta, *, k_maxsplit: int = 4, max_cand: int = 64,
         cap = pts.shape[3]
         rect = jnp.broadcast_to(queries[:, None], (Qc, max_cand, d, 2))
         cnt = window_filter(pts.reshape(-1, d, cap), rect.reshape(-1, d, 2),
-                            size.reshape(-1), backend=backend)
+                            size.reshape(-1), backend=backend,
+                            interpret=interpret)
         return base + jnp.sum(cnt.reshape(Qc, max_cand), axis=1), overflow
 
     def query_batch(arrays: ServingArrays, queries):
@@ -167,12 +204,13 @@ def make_query_fn(theta: Theta, *, k_maxsplit: int = 4, max_cand: int = 64,
 
 def make_distributed_query_fn(theta: Theta, mesh, *, k_maxsplit: int = 4,
                               max_cand: int = 64, q_chunk: int = 16,
-                              backend: str = "xla"):
+                              backend: str = "xla", interpret: bool = False):
     """shard_map over all mesh axes: every device prunes/scans its own page
     shard for the full (replicated) query batch; counts are psum-reduced."""
     axes = tuple(mesh.axis_names)
     local = make_query_fn(theta, k_maxsplit=k_maxsplit, max_cand=max_cand,
-                          q_chunk=q_chunk, backend=backend)
+                          q_chunk=q_chunk, backend=backend,
+                          interpret=interpret)
 
     def _local(arrays, queries):
         counts, over = local(arrays, queries)

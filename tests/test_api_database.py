@@ -1,0 +1,320 @@
+"""The `repro.api.Database` facade: cross-engine parity (exact by
+construction, including overflow escalation), the update→serve path
+(DeltaStore epochs, dirty-page refresh, tombstones), and rebuild policy."""
+import numpy as np
+import pytest
+
+from repro.api import (Database, EngineConfig, FractionRebuildPolicy,
+                       StaleServingError)
+from repro.api.deltas import get_delta_store, rows_in_set
+from repro.core.index import IndexConfig
+from repro.core.query import brute_force_count
+from repro.core.serve import ServingArrays, pack_serving_arrays
+from repro.core.theta import default_K
+from repro.data.synth import make_dataset
+from repro.data.workload import make_workload
+
+
+def _db(n=4000, n_q=16, seed=0, page_bytes=1024, **fit_kw):
+    data = make_dataset("osm", n, seed=seed)
+    K = default_K(2)
+    Ls, Us = make_workload(data, n_q, seed=seed + 1, K=K)
+    db = Database.fit(data, (Ls, Us), K=K, learn=False,
+                      cfg=IndexConfig(paging="heuristic",
+                                      page_bytes=page_bytes), **fit_kw)
+    want = np.asarray([brute_force_count(data, l, u) for l, u in zip(Ls, Us)])
+    return db, data, (Ls, Us), want
+
+
+# ---------------------------------------------------------------------------
+# acceptance: identical counts on cpu / xla / distributed, incl. overflow
+# ---------------------------------------------------------------------------
+
+
+def test_cross_engine_parity_with_overflow_escalation():
+    """The same workload through cpu, xla, and distributed returns identical
+    counts on a shared fixture — including queries that overflow max_cand=1,
+    which escalation (doubled max_cand, CPU fallback) makes exact."""
+    db, data, wl, want = _db()
+    assert db.num_pages > 8  # fixture must be able to overflow max_cand=1
+    results = {}
+    results["cpu"] = db.query(wl, engine="cpu")
+    for name in ("xla", "distributed"):
+        db.engine(name, EngineConfig(max_cand=1, q_chunk=8))
+        results[name] = db.query(wl)
+    for name, res in results.items():
+        assert res.exact, name
+        np.testing.assert_array_equal(res.counts, want, err_msg=name)
+    # the device engines really did overflow on the first pass + escalated
+    for name in ("xla", "distributed"):
+        assert np.any(results[name].overflowed > 0), name
+        assert results[name].escalations > 0, name
+    # CPU never overflows and carries the full mechanical stats
+    assert not results["cpu"].overflowed.any()
+    assert results["cpu"].stats.pages_accessed > 0
+
+
+def test_pallas_engine_parity_interpret_mode():
+    db, data, wl, want = _db(n=2000, n_q=8, page_bytes=2048)
+    db.engine("pallas", EngineConfig(q_chunk=8, interpret=True,
+                                     max_cand=db.num_pages))
+    res = db.query(wl)
+    assert res.exact
+    np.testing.assert_array_equal(res.counts, want)
+
+
+def test_escalation_disabled_flags_residual_overflow():
+    db, data, wl, want = _db(n_q=8)
+    db.engine("xla", EngineConfig(max_cand=1, q_chunk=8, escalate=False,
+                                  cpu_fallback=False))
+    res = db.query(wl)
+    assert not res.exact and res.residual_overflow.any()
+    ok = res.residual_overflow == 0
+    np.testing.assert_array_equal(res.counts[ok], want[ok])
+    assert np.all(res.counts[~ok] <= want[~ok])  # undercounts only
+
+
+# ---------------------------------------------------------------------------
+# update → serve path
+# ---------------------------------------------------------------------------
+
+
+def _mutate(db, data, seed=7, n_new=80):
+    """Insert fresh rows + tombstone a base and an inserted row; returns the
+    live logical row set."""
+    K = db.index.K
+    rng = np.random.default_rng(seed)
+    new = np.unique(rng.integers(0, 2**K, size=(n_new, db.d),
+                                 dtype=np.uint64), axis=0)
+    new = new[~rows_in_set(new, data)]
+    db.insert(new)
+    dead = [data[5], new[0]]
+    db.delete(dead)
+    logical = np.concatenate([data, new])
+    tomb = {tuple(map(int, r)) for r in dead}
+    keep = np.asarray([tuple(map(int, r)) not in tomb for r in logical])
+    return np.unique(logical[keep], axis=0)
+
+
+def test_inserts_visible_through_xla_engine_after_refresh():
+    db, data, wl, _ = _db(n=2500, n_q=12, page_bytes=2048)
+    db.engine("xla", EngineConfig(q_chunk=8, max_cand=db.num_pages))
+    db.query(wl)                                    # arrays packed at epoch 0
+    eng = db.engines["xla"]
+    epoch0 = eng.built_epoch
+    logical = _mutate(db, data)
+    assert db.store.epoch > epoch0                  # mutations bumped epoch
+    assert db.store.dirty_since(epoch0)             # ...and stamped pages
+    db.refresh("xla")
+    assert eng.built_epoch == db.store.epoch        # arrays current again
+    want = np.asarray([brute_force_count(logical, l, u)
+                       for l, u in zip(*wl)])
+    res = db.query(wl, engine="xla")
+    assert res.exact
+    np.testing.assert_array_equal(res.counts, want)
+    # tombstoned rows are point-query invisible (count 0 on their cell)
+    dead = data[5]
+    res = db.query((dead, dead), engine="xla")
+    assert int(res.counts[0]) == 0
+    # and the CPU engine agrees on the full workload
+    np.testing.assert_array_equal(db.query(wl, engine="cpu").counts, want)
+
+
+def test_on_stale_error_and_serve_stale_policies():
+    db, data, wl, want = _db(n=2000, n_q=8, page_bytes=2048)
+    db.engine("xla", EngineConfig(q_chunk=8, max_cand=db.num_pages,
+                                  on_stale="error"))
+    np.testing.assert_array_equal(db.query(wl).counts, want)
+    db.insert(np.asarray([[1, 2]], dtype=np.uint64))
+    with pytest.raises(StaleServingError):
+        db.query(wl)
+    db.refresh("xla")                               # explicit refresh clears it
+    assert db.query(wl).exact
+    # serve_stale: answers from the pre-insert snapshot, no error
+    db.engine("xla", EngineConfig(q_chunk=8, max_cand=db.num_pages,
+                                  on_stale="serve_stale"))
+    db.insert(np.asarray([[3, 4]], dtype=np.uint64))
+    np.testing.assert_array_equal(db.query(wl).counts, want)
+
+
+def test_delta_page_capacity_growth_repack():
+    """Enough inserts into one page overflow the packed point capacity; the
+    refresh must grow cap (full repack) and stay exact."""
+    db, data, wl, _ = _db(n=1500, n_q=8, page_bytes=2048)
+    db.engine("xla", EngineConfig(q_chunk=8, max_cand=db.num_pages))
+    db.query(wl)
+    cap0 = db.engines["xla"]._host.points.shape[2]
+    # target one page's z-neighborhood: near-duplicates of one base row
+    base = data[100].astype(np.int64)
+    K = db.index.K
+    new = []
+    for dx in range(1, cap0 + 16):
+        cand = np.clip(base + [dx, 0], 0, 2**K - 1).astype(np.uint64)
+        new.append(cand)
+    new = np.unique(np.stack(new), axis=0)
+    new = new[~rows_in_set(new, data)]
+    db.insert(new)
+    logical = np.unique(np.concatenate([data, new]), axis=0)
+    res = db.query(wl, engine="xla")                # auto-refresh grows cap
+    assert db.engines["xla"]._host.points.shape[2] > cap0
+    want = np.asarray([brute_force_count(logical, l, u)
+                       for l, u in zip(*wl)])
+    assert res.exact
+    np.testing.assert_array_equal(res.counts, want)
+
+
+def test_cap_growth_repack_preserves_earlier_refreshed_deltas():
+    """A full repack forced by capacity overflow must re-apply EVERY page
+    ever mutated, not just the ones dirty since the last refresh —
+    otherwise deltas/tombstones folded in by earlier refreshes revert."""
+    db, data, wl, _ = _db(n=1500, n_q=8, page_bytes=2048)
+    db.engine("xla", EngineConfig(q_chunk=8, max_cand=db.num_pages))
+    db.query(wl)
+    K = db.index.K
+    # cycle 1: a small insert + a tombstone, folded in by a refresh
+    early = np.clip(data[200].astype(np.int64) + [1, 0], 0,
+                    2**K - 1).astype(np.uint64)[None]
+    early = early[~rows_in_set(early, data)]
+    db.insert(early)
+    db.delete(data[300])
+    db.refresh("xla")
+    # cycle 2: overflow one page's capacity so the refresh repacks fully
+    cap0 = db.engines["xla"]._host.points.shape[2]
+    base = data[100].astype(np.int64)
+    burst = np.unique(np.stack(
+        [np.clip(base + [dx, 0], 0, 2**K - 1).astype(np.uint64)
+         for dx in range(1, cap0 + 16)]), axis=0)
+    burst = burst[~rows_in_set(burst, np.concatenate([data, early]))]
+    db.insert(burst)
+    res = db.query(wl, engine="xla")                # auto-refresh, cap grows
+    assert db.engines["xla"]._host.points.shape[2] > cap0
+    logical = np.concatenate([data, early, burst])
+    keep = ~rows_in_set(logical, data[300][None])
+    logical = np.unique(logical[keep], axis=0)
+    want = np.asarray([brute_force_count(logical, l, u)
+                       for l, u in zip(*wl)])
+    assert res.exact
+    np.testing.assert_array_equal(res.counts, want)
+    # the cycle-1 delta row and tombstone specifically survived the repack
+    assert int(db.query((early[0], early[0]), engine="xla").counts[0]) == 1
+    assert int(db.query((data[300], data[300]), engine="xla").counts[0]) == 0
+
+
+def test_insert_below_global_zmin_stays_visible():
+    """A delta row whose z-address falls below the index's global minimum
+    is clipped onto page 0; page_zmin must grow so candidate tests (CPU
+    z-overlap and device prune) don't skip it."""
+    rng = np.random.default_rng(0)
+    K = default_K(2)
+    data = np.unique(rng.integers(2**10, 2**K, size=(2000, 2),
+                                  dtype=np.uint64), axis=0)
+    Ls, Us = make_workload(data, 8, seed=1, K=K)
+    db = Database.fit(data, (Ls, Us), K=K, learn=False,
+                      cfg=IndexConfig(paging="heuristic", page_bytes=2048))
+    db.engine("xla", EngineConfig(q_chunk=8, max_cand=db.num_pages))
+    db.query((Ls, Us))
+    low = np.zeros(2, dtype=np.uint64)              # z = 0 < every base z
+    db.insert(low)
+    for name in ("cpu", "xla"):
+        assert int(db.query((low, low), engine=name).counts[0]) == 1, name
+
+
+def test_delete_accounting_unknown_and_duplicate_rows():
+    db, data, wl, _ = _db(n=1500, n_q=6, page_bytes=2048)
+    n0, epoch0 = db.n, db.store.epoch
+    db.delete(np.asarray([999999, 999999], dtype=np.uint64))  # not in db
+    assert db.n == n0 and db.store.epoch == epoch0            # true no-op
+    db.delete(data[9])
+    db.delete(data[9])                                        # idempotent
+    assert db.n == n0 - 1 and db.store.n_deleted == 1
+
+
+def test_rebuild_policy_triggers_at_configured_fraction():
+    db, data, wl, _ = _db(n=2000, n_q=8, page_bytes=2048,
+                          policy=FractionRebuildPolicy(frac=0.02, auto=True))
+    db.engine("xla", EngineConfig(q_chunk=8, max_cand=db.num_pages))
+    db.query(wl)
+    n_trigger = int(0.02 * db.index.n) + 1
+    logical = _mutate(db, data, n_new=n_trigger + 40)
+    # auto policy fired: deltas folded into a fresh index, store reset
+    # (the two tombstones land after the rebuild and stay as deltas)
+    assert db.store.n_inserted == 0 and not db.store.deltas
+    assert not db.rebuild_pending
+    assert db.n == len(logical)
+    want = np.asarray([brute_force_count(logical, l, u)
+                       for l, u in zip(*wl)])
+    for name in ("cpu", "xla"):
+        res = db.query(wl, engine=name)
+        assert res.exact
+        np.testing.assert_array_equal(res.counts, want, err_msg=name)
+
+
+def test_rebuild_pending_flag_without_auto():
+    db, data, wl, _ = _db(n=2000, n_q=8,
+                          policy=FractionRebuildPolicy(frac=0.01, auto=False))
+    _mutate(db, data, n_new=60)
+    assert db.rebuild_pending
+    n_before = db.index.n
+    db.rebuild()
+    assert not db.rebuild_pending and db.index.n > n_before
+
+
+# ---------------------------------------------------------------------------
+# serving-array packing (vectorized scatter == per-page loop)
+# ---------------------------------------------------------------------------
+
+
+def _pack_loop_reference(index, pad_pages_to=1, cap=None):
+    """The pre-vectorization per-page packing loop, kept as the oracle."""
+    from repro.core.zorder64 import u64_to_z64
+    Pn, d = index.num_pages, index.d
+    cap = cap or int(np.diff(index.starts).max())
+    P_pad = -(-Pn // pad_pages_to) * pad_pages_to
+    pts = np.zeros((P_pad, d, cap), dtype=np.uint32)
+    size = np.zeros(P_pad, dtype=np.int32)
+    for p in range(Pn):
+        s, e = index.starts[p], index.starts[p + 1]
+        pts[p, :, :e - s] = index.xs[s:e].astype(np.uint32).T
+        size[p] = e - s
+    mbr = np.zeros((P_pad, d, 2), dtype=np.uint32)
+    mbr[:Pn] = index.mbrs.astype(np.uint32)
+    mbr[Pn:, :, 0] = np.uint32(0xFFFFFFFF)
+    zmin = np.full((P_pad, 2), np.int32(-1))
+    zmax = np.zeros((P_pad, 2), dtype=np.int32)
+    zmin[:Pn] = u64_to_z64(index.page_zmin)
+    zmax[:Pn] = u64_to_z64(index.page_zmax)
+    return ServingArrays(points=pts.view(np.int32), page_zmin=zmin,
+                         page_zmax=zmax, page_mbr=mbr.view(np.int32),
+                         page_size=size)
+
+
+@pytest.mark.parametrize("pad", [1, 8])
+def test_pack_serving_arrays_matches_loop_reference(pad):
+    db, *_ = _db(n=3000, page_bytes=1024)
+    got = pack_serving_arrays(db.index, pad_pages_to=pad)
+    ref = _pack_loop_reference(db.index, pad_pages_to=pad)
+    for f in ("points", "page_zmin", "page_zmax", "page_mbr", "page_size"):
+        np.testing.assert_array_equal(getattr(got, f), getattr(ref, f),
+                                      err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# legacy shim surface stays importable and store-backed
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_free_functions_are_store_backed():
+    from repro.core import index as index_mod
+    db, data, wl, _ = _db(n=1500, n_q=6, page_bytes=2048)
+    idx = db.index
+    row = np.asarray([123, 456], dtype=np.uint64)
+    p = index_mod.insert(idx, row)
+    store = get_delta_store(idx)
+    assert store.n_inserted == 1 and p in store.deltas
+    assert idx._deltas is store.deltas            # aliased, not copied
+    index_mod.delete(idx, row)
+    assert tuple(map(int, row)) in store.tombstones
+    assert index_mod.delta_count(idx, p, row, row) == 0
+    assert not index_mod.needs_rebuild(idx, frac=0.5)
+    idx2 = index_mod.rebuild(idx)
+    assert idx2.n == idx.n                        # insert+delete cancel out

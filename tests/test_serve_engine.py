@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import Database, EngineConfig
 from repro.core.index import IndexConfig, LMSFCIndex
 from repro.core.query import brute_force_count
 from repro.core.serve import (build_serving_arrays, make_distributed_query_fn,
@@ -29,12 +30,12 @@ def _setup(name="osm", n=3000, n_q=32, seed=0, paging="heuristic"):
     queries = np.stack([Ls, Us], axis=-1).astype(np.uint64)
     q_i32 = jnp.asarray(queries.astype(np.uint32).view(np.int32))
     want = np.asarray([brute_force_count(data, l, u) for l, u in zip(Ls, Us)])
-    return data, idx, theta, q_i32, want
+    return data, idx, theta, q_i32, want, (Ls, Us)
 
 
 @pytest.mark.parametrize("name", ["osm", "nyc", "stock"])
 def test_vectorized_engine_exact(name):
-    data, idx, theta, q, want = _setup(name)
+    data, idx, theta, q, want, wl = _setup(name)
     arrays = build_serving_arrays(idx)
     qfn = make_query_fn(theta, k_maxsplit=4, max_cand=max(64, idx.num_pages),
                         q_chunk=8)
@@ -45,7 +46,7 @@ def test_vectorized_engine_exact(name):
 
 
 def test_overflow_flag_when_cand_bound_too_small():
-    data, idx, theta, q, want = _setup("osm", n=5000, n_q=16)
+    data, idx, theta, q, want, wl = _setup("osm", n=5000, n_q=16)
     arrays = build_serving_arrays(idx)
     qfn = make_query_fn(theta, max_cand=1, q_chunk=8)
     counts, overflow = jax.jit(qfn)(arrays, q)
@@ -58,7 +59,7 @@ def test_overflow_flag_when_cand_bound_too_small():
 
 
 def test_distributed_engine_single_device_mesh():
-    data, idx, theta, q, want = _setup("nyc")
+    data, idx, theta, q, want, wl = _setup("nyc")
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     arrays = build_serving_arrays(idx, pad_pages_to=1)
     arrays = shard_serving_arrays(arrays, mesh)
@@ -66,6 +67,22 @@ def test_distributed_engine_single_device_mesh():
                                       max_cand=max(64, idx.num_pages), q_chunk=8)
     counts, over = fn(arrays, q)
     np.testing.assert_array_equal(np.asarray(counts), want)
+
+
+def test_facade_routes_same_engine_exactly():
+    """The repro.api facade over the same index matches the hand-wired
+    core engines (xla and distributed), unified under QueryResult."""
+    data, idx, theta, q, want, (Ls, Us) = _setup("osm")
+    db = Database(idx)
+    db.engine("xla", EngineConfig(max_cand=max(64, idx.num_pages), q_chunk=8))
+    res = db.query((Ls, Us))
+    assert res.exact and not res.overflowed.any()
+    np.testing.assert_array_equal(res.counts, want)
+    db.engine("distributed",
+              EngineConfig(max_cand=max(64, idx.num_pages), q_chunk=8))
+    res = db.query((Ls, Us))
+    assert res.exact
+    np.testing.assert_array_equal(res.counts, want)
 
 
 def test_distributed_engine_8_devices():

@@ -1,7 +1,9 @@
 """Paper §7.11: insertion via delta pages (LMSFCb), tombstone deletion,
-periodic rebuild (LMSFCa)."""
+periodic rebuild (LMSFCa) — through the `repro.api.Database` facade, plus
+the legacy free-function shims."""
 import numpy as np
 
+from repro.api import Database, FractionRebuildPolicy
 from repro.core import index as index_mod
 from repro.core.index import IndexConfig, LMSFCIndex
 from repro.core.query import brute_force_count, query_count
@@ -10,35 +12,62 @@ from repro.data.synth import make_dataset
 from repro.data.workload import make_workload
 
 
-def test_insert_delete_rebuild_exact():
+def _fixture(seed=11, n=3000, n_new=300):
     rng = np.random.default_rng(0)
-    data = make_dataset("osm", 3000, seed=11)
+    data = make_dataset("osm", n, seed=seed)
     K = default_K(2)
-    Ls, Us = make_workload(data, 30, seed=11, K=K)
-    idx = LMSFCIndex.build(data, cfg=IndexConfig(paging="heuristic",
-                                                 page_bytes=2048),
-                           workload=(Ls, Us), K=K)
-    # insert 10% new points
-    new_pts = np.unique(rng.integers(0, 2**K, size=(300, 2), dtype=np.uint64),
-                        axis=0)
+    Ls, Us = make_workload(data, 30, seed=seed, K=K)
+    new_pts = np.unique(rng.integers(0, 2**K, size=(n_new, 2),
+                                     dtype=np.uint64), axis=0)
     mask = ~np.any(np.all(new_pts[:, None] == data[None, :400], axis=2), 1)
-    new_pts = new_pts[mask]
-    for x in new_pts:
-        index_mod.insert(idx, x)
-    # delete a few base + a few inserted points
-    deleted = [data[5], data[77], new_pts[0], new_pts[1]]
-    for x in deleted:
-        index_mod.delete(idx, x)
+    return data, (Ls, Us), new_pts[mask], K
 
+
+def _logical(data, new_pts, deleted):
     logical = np.concatenate([data, new_pts])
     dset = {tuple(int(v) for v in x) for x in deleted}
     keep = np.asarray([tuple(int(v) for v in r) not in dset for r in logical])
-    logical = np.unique(logical[keep], axis=0)
+    return np.unique(logical[keep], axis=0)
+
+
+def test_database_insert_delete_rebuild_exact():
+    data, (Ls, Us), new_pts, K = _fixture()
+    db = Database.fit(data, (Ls, Us), K=K, learn=False,
+                      cfg=IndexConfig(paging="heuristic", page_bytes=2048),
+                      policy=FractionRebuildPolicy(frac=0.05, auto=False))
+    db.insert(new_pts)                      # 10% new rows
+    deleted = [data[5], data[77], new_pts[0], new_pts[1]]
+    db.delete(deleted)
+    logical = _logical(data, new_pts, deleted)
+
+    res = db.query((Ls, Us))                # CPU engine, delta-aware
+    want = np.asarray([brute_force_count(logical, l, u)
+                       for l, u in zip(Ls, Us)])
+    np.testing.assert_array_equal(res.counts, want)
+    assert res.exact
+
+    assert db.rebuild_pending               # the 5% policy tripped
+    db.rebuild()
+    assert db.store.epoch == 0 and not db.store.deltas
+    np.testing.assert_array_equal(db.query((Ls, Us)).counts, want)
+
+
+def test_legacy_insert_delete_rebuild_exact():
+    """Pre-facade free functions still work (thin shims over DeltaStore)."""
+    data, (Ls, Us), new_pts, K = _fixture()
+    idx = LMSFCIndex.build(data, cfg=IndexConfig(paging="heuristic",
+                                                 page_bytes=2048),
+                           workload=(Ls, Us), K=K)
+    for x in new_pts:
+        index_mod.insert(idx, x)
+    deleted = [data[5], data[77], new_pts[0], new_pts[1]]
+    for x in deleted:
+        index_mod.delete(idx, x)
+    logical = _logical(data, new_pts, deleted)
 
     for qL, qU in zip(Ls, Us):
-        got = query_count(idx, qL, qU).result
-        want = brute_force_count(logical, qL, qU)
-        assert got == want
+        assert query_count(idx, qL, qU).result == \
+            brute_force_count(logical, qL, qU)
 
     assert index_mod.needs_rebuild(idx, frac=0.05)
     idx2 = index_mod.rebuild(idx, workload=(Ls, Us))
