@@ -1,13 +1,16 @@
 """repro.api — the repo's public index-lifecycle API.
 
-One object (`Database`) covers the paper's whole pipeline — SMBO
-θ-learning, index build, window queries on any execution engine (CPU /
+One object (`Database`) covers the paper's whole pipeline — SMBO curve
+learning (a global θ or a BMTree-style `PiecewiseCurve`, see README
+§ Curves), index build, window queries on any execution engine (CPU /
 XLA / Pallas / distributed shard_map), LMSFCb delta updates, and LMSFCa
 rebuilds — with exact counts by construction on every engine.
 
 See `Database` for the quickstart and README.md § API for the migration
 table from the pre-facade call sites.
 """
+from ..core.curve import (GlobalTheta, MonotonicCurve, PiecewiseCurve,
+                          as_curve, curve_from_json)
 from .database import Database
 from .deltas import DeltaStore, get_delta_store
 from .engines import (BaseEngine, StaleServingError, engine_names,
@@ -17,6 +20,8 @@ from .result import EngineConfig, QueryResult
 
 __all__ = [
     "Database", "DeltaStore", "get_delta_store",
+    "MonotonicCurve", "GlobalTheta", "PiecewiseCurve", "as_curve",
+    "curve_from_json",
     "BaseEngine", "StaleServingError", "engine_names", "make_engine",
     "register_engine",
     "FractionRebuildPolicy", "NeverRebuild", "RebuildPolicy",

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..core.curve import MonotonicCurve, as_curve, default_curve
 from ..core.index import IndexConfig, LMSFCIndex
 from ..core.query import QueryStats, query_count
 from ..core.theta import Theta, default_K
@@ -31,16 +32,42 @@ from .engines import make_engine
 from .policy import FractionRebuildPolicy, RebuildPolicy
 from .result import EngineConfig, QueryResult
 
+_FAMILIES = ("global", "piecewise")
 
-def _learn_theta(data, workload, K, smbo=None, sample=3000, seed=0):
-    """Sample the data and run SMBO θ-learning (shared by fit/rebuild)."""
+
+def _learn_curve(data, workload, K, smbo=None, sample=3000, seed=0,
+                 space="global"):
+    """Sample the data and run SMBO curve-learning (shared by fit/rebuild)."""
     from ..core.smbo import learn_sfc         # heavy import, lazy
     Ls, Us = workload
     rng = np.random.default_rng(seed)
     samp = data[rng.choice(len(data), min(sample, len(data)), replace=False)]
-    kw = dict(max_iters=3, n_init=5, evals_per_iter=2)
+    kw = dict(max_iters=3, n_init=5, evals_per_iter=2, space=space)
     kw.update(smbo or {})
     return learn_sfc(samp, np.asarray(Ls), np.asarray(Us), K=K, **kw)
+
+
+def _resolve_curve_arg(curve, theta):
+    """Normalize fit()'s curve/theta inputs to (fixed_curve, family).
+
+    Accepted for `curve`: a family name ('global' | 'piecewise') selecting
+    the SMBO search space, a `MonotonicCurve`, a legacy `Theta`, or curve
+    JSON (`MonotonicCurve.to_json` round-trips through here).
+    """
+    if curve is not None and theta is not None:
+        raise ValueError("pass either curve= or the legacy theta=, not both")
+    if curve is None:
+        return (as_curve(theta), "global") if theta is not None \
+            else (None, "global")
+    if isinstance(curve, str):
+        if curve in _FAMILIES:
+            return None, curve
+        if not curve.lstrip().startswith("{"):
+            raise ValueError(
+                f"unknown curve family {curve!r}; expected one of "
+                f"{_FAMILIES}, a MonotonicCurve/Theta instance, or curve "
+                f"JSON from curve.to_json()")
+    return as_curve(curve), "global"
 
 
 def _norm_rects(rects, U=None):
@@ -75,28 +102,49 @@ class Database:
     # ------------------------------------------------------------------
     @classmethod
     def fit(cls, data, workload=None, *, cfg: IndexConfig = None,
-            K: int = None, theta: Theta = None, learn: bool = True,
-            sample: int = 3000, smbo: dict = None,
+            K: int = None, theta: Theta = None, curve=None,
+            learn: bool = True, sample: int = 3000, smbo: dict = None,
             policy: RebuildPolicy = None, seed: int = 0) -> "Database":
-        """SMBO θ-learning (when a training workload is given) + build.
+        """SMBO curve-learning (when a training workload is given) + build.
 
-        `workload` is the ``(Ls, Us)`` training workload; without it (or
-        with ``learn=False``) the index is built on the given/z-order θ.
-        `smbo` forwards kwargs to :func:`repro.core.smbo.learn_sfc`.
+        `curve` selects the SFC axis: a family name (``"global"`` — the
+        paper's single θ, the default — or ``"piecewise"`` — BMTree-style
+        per-region θ) names the SMBO search space, while a concrete
+        `MonotonicCurve`, legacy `Theta`, or curve JSON string (from
+        ``db.index.curve.to_json()``; round-trips exactly) pins the curve
+        with no learning.  `workload` is the ``(Ls, Us)`` training
+        workload; without it (or with ``learn=False``) the index is built
+        on the pinned curve or the family's z-order member.  `smbo`
+        forwards kwargs to :func:`repro.core.smbo.learn_sfc` (e.g.
+        ``{"depth": 2}`` for deeper piecewise quadtrees).
         """
         data = np.asarray(data, dtype=np.uint64)
         d = data.shape[1]
+        fixed, family = _resolve_curve_arg(curve, theta)
+        if fixed is not None and K is not None and K != fixed.K:
+            raise ValueError(f"K={K} conflicts with the pinned curve's "
+                             f"K={fixed.K}")
         K = K or default_K(d)
         fit_result = None
-        if theta is None and learn and workload is not None:
-            fit_result = _learn_theta(data, workload, K, smbo=smbo,
-                                      sample=sample, seed=seed)
-            theta = fit_result.theta_best
-        index = LMSFCIndex.build(data, theta=theta, cfg=cfg,
-                                 workload=workload, K=K)
+        if fixed is None:
+            if learn and workload is not None:
+                fit_result = _learn_curve(data, workload, K, smbo=smbo,
+                                          sample=sample, seed=seed,
+                                          space=family)
+                fixed = fit_result.curve_best
+            else:
+                fixed = default_curve(d, K, family=family,
+                                      depth=(smbo or {}).get("depth", 1))
+        index = LMSFCIndex.build(data, curve=fixed, cfg=cfg,
+                                 workload=workload)
         db = cls(index, policy=policy, workload=workload)
         db.fit_result = fit_result
         return db
+
+    @property
+    def curve(self) -> MonotonicCurve:
+        """The index's space-filling curve (serialize via `.to_json()`)."""
+        return self.index.curve
 
     # ------------------------------------------------------------------
     # engines
@@ -216,13 +264,16 @@ class Database:
         index (optionally re-learning θ), and invalidate every engine."""
         data = self.store.merged_data()
         wl = workload if workload is not None else self.workload
-        theta = self.index.theta
+        curve = self.index.curve
         if relearn and wl is not None:
-            self.fit_result = _learn_theta(data, wl, self.index.K, smbo=smbo,
-                                           sample=sample, seed=seed)
-            theta = self.fit_result.theta_best
-        self.index = LMSFCIndex.build(data, theta=theta, cfg=self.index.cfg,
-                                      workload=wl, K=self.index.K)
+            kw = dict(smbo or {})
+            kw.setdefault("depth", getattr(curve, "depth", 1))
+            self.fit_result = _learn_curve(data, wl, self.index.K, smbo=kw,
+                                           sample=sample, seed=seed,
+                                           space=curve.kind)
+            curve = self.fit_result.curve_best
+        self.index = LMSFCIndex.build(data, curve=curve, cfg=self.index.cfg,
+                                      workload=wl)
         self.rebuild_pending = False
         for eng in self._engines.values():
             eng.invalidate()

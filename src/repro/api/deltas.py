@@ -27,7 +27,6 @@ from typing import Dict, List, Set, Tuple
 
 import numpy as np
 
-from ..core.sfc import encode_np
 
 
 def rows_void(a: np.ndarray) -> np.ndarray:
@@ -70,7 +69,7 @@ class DeltaStore:
         xs = np.asarray(xs, dtype=np.uint64)
         if len(xs) == 0:
             return np.empty(0, dtype=np.int64)
-        z = encode_np(xs, index.theta)
+        z = index.curve.encode_np(xs)
         ps = np.asarray(index.page_of(z), dtype=np.int64)
         # keep page metadata query-safe: grow the MBR to cover the deltas,
         # and grow the page z-range (zmax, and zmin for below-minimum rows
@@ -94,7 +93,7 @@ class DeltaStore:
         key = tuple(int(v) for v in x)
         if key in self.tombstones:
             return
-        z = encode_np(x[None], index.theta)[0]
+        z = index.curve.encode_np(x[None])[0]
         p = int(index.page_of(z)[0])
         exists = bool(rows_in_set(x[None], index.xs)[0])
         if not exists and self.deltas.get(p):

@@ -231,7 +231,7 @@ class XlaEngine(_DeviceEngine):
     def _qfn(self, max_cand):
         import jax
         return jax.jit(make_query_fn(
-            self.db.index.theta, k_maxsplit=self.cfg.k_maxsplit,
+            self.db.index.curve, k_maxsplit=self.cfg.k_maxsplit,
             max_cand=max_cand, q_chunk=self.cfg.q_chunk,
             backend=self.backend, interpret=self.cfg.interpret))
 
@@ -274,7 +274,7 @@ class DistributedEngine(_DeviceEngine):
     def _qfn(self, max_cand):
         import jax
         fn, _ = make_distributed_query_fn(
-            self.db.index.theta, self.mesh, k_maxsplit=self.cfg.k_maxsplit,
+            self.db.index.curve, self.mesh, k_maxsplit=self.cfg.k_maxsplit,
             max_cand=max_cand, q_chunk=self.cfg.q_chunk,
             backend=self.backend, interpret=self.cfg.interpret)
         return jax.jit(fn)

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..core.curve import GlobalTheta
 from ..core.index import LMSFCIndex
 from ..core.query import QueryStats, _scan_page
 from ..core.sfc import encode_np, encode_scalar
@@ -68,6 +69,12 @@ def fnz_query(index: LMSFCIndex, qL: np.ndarray, qU: np.ndarray) -> QueryStats:
     """UB-tree style scan: after each page, jump to the next true-positive
     z-address (one forward-index access per true-positive page)."""
     stats = QueryStats()
+    if not isinstance(index.curve, GlobalTheta):
+        # BIGMIN's bit-walk assumes ONE fixed (dim, bit) per output position;
+        # piecewise curves change that per region, so the walk is undefined.
+        raise TypeError(
+            f"FNZ skipping requires a GlobalTheta curve, got "
+            f"{type(index.curve).__name__}; use skipping='rqs'")
     theta = index.theta
     zlo = int(encode_np(qL[None], theta)[0])
     zhi = int(encode_np(qU[None], theta)[0])

@@ -1,0 +1,125 @@
+"""Vectorized BatchEval: the whole sampled workload evaluated at once.
+
+`run_workload` (core/query.py) is a faithful per-query Python loop — fine
+for serving a handful of ad-hoc queries on the CPU engine, but it *is* the
+SMBO objective (Algorithm 1, line 4 evaluates every candidate curve by
+replaying the sampled workload), so its interpreter overhead directly caps
+how many candidates θ-learning can afford.  This module re-expresses the
+identical computation as whole-workload numpy:
+
+  split    — `recursive_split_np_batch`: the (Q, 2^k) static sub-query
+             tensor with validity masks (same leaf multiset per query as
+             the per-query recursion, same cut rule and tie-breaks)
+  project  — batched curve encode of every sub-query corner + one PGM
+             `page_of` probe over all (Q·S) z-bounds (Theorem 1)
+  mask     — (Q, P) candidate-page masks: PGM range ∧ z-overlap, reduced
+             over sub-queries; MBR disjoint/containment classification
+  account  — page- and row-level boolean algebra for pages accessed,
+             points scanned, false positives and exact counts
+
+Exactness: every statistic in the returned `QueryStats` (and therefore
+every cost value in cost.py) is bit-identical to the per-query evaluator —
+asserted ulp-for-ulp by tests/test_curve.py and the bench-smbo-smoke CI
+job.  Workloads that need the delta store or FNZ skipping fall back to the
+per-query engine.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .index import LMSFCIndex
+from .query import QueryStats, run_workload
+from .split import recursive_split_np_batch
+
+# element budget per query chunk (bools/int64 intermediates); keeps the
+# (C, S, P) and (C, n) tensors comfortably in cache-friendly territory
+_CHUNK_BUDGET = 8_000_000
+
+
+def _needs_fallback(index: LMSFCIndex) -> bool:
+    if index.cfg.skipping == "fnz":
+        return True
+    store = getattr(index, "_delta_store", None)
+    return store is not None and bool(store.deltas or store.tombstones)
+
+
+def run_workload_batched(index: LMSFCIndex, Ls: np.ndarray, Us: np.ndarray):
+    """Drop-in replacement for `run_workload`: (counts, aggregated stats),
+    bit-identical results, no per-query Python loop."""
+    if _needs_fallback(index):
+        return run_workload(index, Ls, Us)
+    Ls = np.atleast_2d(np.asarray(Ls, dtype=np.uint64))
+    Us = np.atleast_2d(np.asarray(Us, dtype=np.uint64))
+    Q, d = Ls.shape
+    agg = QueryStats()
+    counts = np.zeros(Q, dtype=np.int64)
+    if Q == 0:
+        return counts, agg
+
+    cfg = index.cfg
+    k = cfg.k_maxsplit if (cfg.use_query_split and cfg.skipping == "rqs") else 0
+    P = index.num_pages
+    n = index.n
+    S = 1 << k
+    chunk = int(np.clip(_CHUNK_BUDGET // max(S * P, 2 * n, P * d, 1), 8, 1024))
+
+    xs = index.xs                                    # (n, d) uint64
+    sizes = np.diff(index.starts).astype(np.int64)   # (P,)
+    row_page = np.repeat(np.arange(P, dtype=np.int64), sizes)
+    sd_row = index.sort_dims[row_page]               # (n,)
+    mbr_lo = index.mbrs[..., 0]                      # (P, d) int64
+    mbr_hi = index.mbrs[..., 1]
+    page_ar = np.arange(P, dtype=np.int64)
+
+    for c0 in range(0, Q, chunk):
+        qL = Ls[c0:c0 + chunk]                       # (C, d)
+        qU = Us[c0:c0 + chunk]
+        C = len(qL)
+        # ---- split + projection (Theorem 1) -----------------------------
+        rects, valid = recursive_split_np_batch(qL, qU, index.curve, k)
+        leaves = valid.sum(axis=1).astype(np.int64)  # (C,)
+        zlo = index.curve.encode_np(rects[..., 0])   # (C, S)
+        zhi = index.curve.encode_np(rects[..., 1])
+        plo = index.page_of(zlo.ravel()).reshape(C, S)
+        phi = index.page_of(zhi.ravel()).reshape(C, S)
+        # ---- candidate-page masks ---------------------------------------
+        inrange = ((plo[..., None] <= page_ar) &
+                   (page_ar <= phi[..., None]))      # (C, S, P)
+        zov = ((index.page_zmax >= zlo[..., None]) &
+               (index.page_zmin <= zhi[..., None]))
+        cand = np.any(inrange & zov & valid[..., None], axis=1)  # (C, P)
+        # ---- MBR classification (same compares as _scan_page) -----------
+        disjoint = ((mbr_lo > qU[:, None, :]) |
+                    (mbr_hi < qL[:, None, :])).any(axis=-1)      # (C, P)
+        contained = ((mbr_lo >= qL[:, None, :]) &
+                     (mbr_hi <= qU[:, None, :])).all(axis=-1)
+        accessed = cand & ~disjoint
+        fullpg = accessed & contained
+        partial = accessed & ~contained
+        base = fullpg.astype(np.int64) @ sizes       # (C,)
+        # ---- row-level accounting for partial pages ---------------------
+        # only rows living on a page some query hits partially matter —
+        # mirroring the legacy engine, which never reads the other pages
+        rows_sel = np.flatnonzero(partial.any(axis=0)[row_page])
+        xsel = xs[rows_sel]                          # (m, d)
+        ok_full = np.ones((C, len(rows_sel)), dtype=bool)
+        sd_ok = np.zeros_like(ok_full)
+        sd_sel = sd_row[rows_sel]
+        for i in range(d):
+            wi = ((xsel[:, i] >= qL[:, i:i + 1]) &
+                  (xsel[:, i] <= qU[:, i:i + 1]))    # (C, m)
+            ok_full &= wi
+            sd_ok |= wi & (sd_sel == i)
+        partial_row = partial[:, row_page[rows_sel]]  # (C, m)
+        scanned = (partial_row & sd_ok).sum(axis=1).astype(np.int64)
+        matches = (partial_row & ok_full).sum(axis=1).astype(np.int64)
+        # ---- reduce ------------------------------------------------------
+        counts[c0:c0 + C] = base + matches
+        agg.pages_accessed += int(accessed.sum())
+        agg.irrelevant_pages += int((cand & disjoint).sum())
+        agg.points_scanned += int(scanned.sum())
+        agg.false_positives += int((scanned - matches).sum())
+        agg.index_accesses += int(2 * leaves.sum())
+        agg.subqueries += int(leaves.sum())
+        agg.result += int((base + matches).sum())
+    return counts, agg

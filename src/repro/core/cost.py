@@ -9,6 +9,11 @@ actually building a (sampled) index and running the (sampled) workload:
 c_page=1.0, c_scan=0.02, c_idx=0.1: one 8KB page access ≈ 50 point
 inspections ≈ 10 learned-index probes.  Deterministic and noise-free, which
 also removes the finite-sample evaluation noise the paper mentions.
+
+Two evaluators produce bit-identical costs (asserted in CI):
+  'batched' — whole-workload numpy (core/batcheval.py); the default, it is
+              what lets SMBO afford large candidate pools (BENCH_smbo.json)
+  'legacy'  — the faithful per-query loop (core/query.py run_workload)
 """
 from __future__ import annotations
 
@@ -16,13 +21,16 @@ import dataclasses
 
 import numpy as np
 
+from .batcheval import run_workload_batched
+from .curve import as_curve
 from .index import IndexConfig, LMSFCIndex
 from .query import run_workload
-from .theta import Theta
 
 C_PAGE = 1.0
 C_SCAN = 0.02
 C_IDX = 0.1
+
+_EVALUATORS = {"legacy": run_workload, "batched": run_workload_batched}
 
 
 @dataclasses.dataclass
@@ -36,19 +44,29 @@ class CostBreakdown:
         return C_PAGE * self.pages + C_SCAN * self.scanned + C_IDX * self.index_accesses
 
 
-def workload_cost(index: LMSFCIndex, Ls: np.ndarray, Us: np.ndarray) -> CostBreakdown:
-    _, agg = run_workload(index, Ls, Us)
+def workload_cost(index: LMSFCIndex, Ls: np.ndarray, Us: np.ndarray,
+                  evaluator: str = "batched") -> CostBreakdown:
+    if evaluator not in _EVALUATORS:
+        raise ValueError(f"unknown evaluator {evaluator!r}; "
+                         f"expected one of {sorted(_EVALUATORS)}")
+    _, agg = _EVALUATORS[evaluator](index, Ls, Us)
     nq = max(1, len(Ls))
     return CostBreakdown(pages=agg.pages_accessed / nq,
                          scanned=agg.points_scanned / nq,
                          index_accesses=agg.index_accesses / nq)
 
 
-def evaluate_theta(theta: Theta, data: np.ndarray, Ls: np.ndarray,
-                   Us: np.ndarray, cfg: IndexConfig = None, K: int = None) -> float:
-    """Build a (mini) index under θ and return the scalar workload cost.
-    This is the paper's BatchEval unit (Algorithm 1, line 4)."""
+def evaluate_curve(curve, data: np.ndarray, Ls: np.ndarray,
+                   Us: np.ndarray, cfg: IndexConfig = None, K: int = None,
+                   evaluator: str = "batched") -> float:
+    """Build a (mini) index under the curve and return the scalar workload
+    cost.  This is the paper's BatchEval unit (Algorithm 1, line 4);
+    accepts any `MonotonicCurve` or a legacy `Theta`."""
     cfg = cfg or IndexConfig(paging="heuristic")
-    idx = LMSFCIndex.build(data, theta=theta, cfg=cfg,
+    idx = LMSFCIndex.build(data, curve=as_curve(curve), cfg=cfg,
                            workload=(Ls, Us), K=K)
-    return workload_cost(idx, Ls, Us).total
+    return workload_cost(idx, Ls, Us, evaluator=evaluator).total
+
+
+# legacy name (pre-curve call sites); same semantics, any curve accepted
+evaluate_theta = evaluate_curve

@@ -12,7 +12,7 @@ import numpy as np
 from . import paging as paging_mod
 from . import pgm as pgm_mod
 from . import sortdim as sortdim_mod
-from .sfc import encode_np
+from .curve import GlobalTheta, MonotonicCurve, as_curve
 from .theta import Theta, default_K, zorder
 
 
@@ -31,7 +31,7 @@ class IndexConfig:
 
 @dataclasses.dataclass
 class LMSFCIndex:
-    theta: Theta
+    curve: MonotonicCurve
     cfg: IndexConfig
     K: int
     xs: np.ndarray          # (n, d) uint64, z-sorted then sort-dim-ordered per page
@@ -43,6 +43,16 @@ class LMSFCIndex:
     pgm: pgm_mod.PGMIndex
 
     # ------------------------------------------------------------------
+    @property
+    def theta(self) -> Theta:
+        """Legacy accessor: the single global θ (pre-curve call sites).
+        Only meaningful for `GlobalTheta` indexes."""
+        if isinstance(self.curve, GlobalTheta):
+            return self.curve.theta
+        raise AttributeError(
+            f"index was built with a {type(self.curve).__name__} curve, "
+            f"which has no single θ; use index.curve")
+
     @property
     def n(self) -> int:
         return len(self.xs)
@@ -68,16 +78,31 @@ class LMSFCIndex:
 
     # ------------------------------------------------------------------
     @staticmethod
-    def build(data: np.ndarray, theta: Theta = None, cfg: IndexConfig = None,
-              workload=None, K: int = None) -> "LMSFCIndex":
-        """data: (n, d) non-negative ints < 2^K, duplicate-free."""
+    def build(data: np.ndarray, theta=None, cfg: IndexConfig = None,
+              workload=None, K: int = None, *,
+              curve=None) -> "LMSFCIndex":
+        """data: (n, d) non-negative ints < 2^K, duplicate-free.
+
+        The SFC is given as `curve` (any `MonotonicCurve`, a legacy `Theta`,
+        or curve JSON); `theta=` remains as an alias for pre-curve call
+        sites.  Default: z-order over K = default_K(d) bits.
+        """
         cfg = cfg or IndexConfig()
         data = np.asarray(data, dtype=np.uint64)
         d = data.shape[1]
-        K = K or default_K(d)
-        theta = theta or zorder(d, K)
+        if curve is not None and theta is not None:
+            raise ValueError("pass either curve= or the legacy theta=, not both")
+        curve = as_curve(curve if curve is not None else theta)
+        if curve is None:
+            K = K or default_K(d)
+            curve = GlobalTheta(zorder(d, K))
+        elif K is not None and K != curve.K:
+            raise ValueError(f"K={K} conflicts with curve.K={curve.K}")
+        K = curve.K
+        if curve.d != d:
+            raise ValueError(f"curve.d={curve.d} != data dimension {d}")
 
-        z = encode_np(data, theta)
+        z = curve.encode_np(data)
         order = np.argsort(z, kind="stable")
         xs = data[order]
         zs = z[order]
@@ -98,7 +123,7 @@ class LMSFCIndex:
         xs = sortdim_mod.apply_sort_dims(xs, starts, sort_dims)
 
         pgm = pgm_mod.build_pgm(page_zmin, eps=cfg.pgm_eps)
-        return LMSFCIndex(theta=theta, cfg=cfg, K=K, xs=xs, starts=starts,
+        return LMSFCIndex(curve=curve, cfg=cfg, K=K, xs=xs, starts=starts,
                           mbrs=pg.mbrs, sort_dims=sort_dims,
                           page_zmin=page_zmin, page_zmax=page_zmax, pgm=pgm)
 
@@ -153,5 +178,5 @@ def rebuild(index: "LMSFCIndex", workload=None) -> "LMSFCIndex":
     rebuild paging/sort-dims/PGM (the paper's LMSFCa periodic maintenance;
     callers may re-run learn_sfc for a fresh θ before calling this)."""
     data = _store(index).merged_data()
-    return LMSFCIndex.build(data, theta=index.theta, cfg=index.cfg,
-                            workload=workload, K=index.K)
+    return LMSFCIndex.build(data, curve=index.curve, cfg=index.cfg,
+                            workload=workload)

@@ -18,7 +18,6 @@ import dataclasses
 import numpy as np
 
 from .index import LMSFCIndex
-from .sfc import encode_np
 from .split import recursive_split
 
 
@@ -74,15 +73,15 @@ def query_count(index: LMSFCIndex, qL, qU) -> QueryStats:
         from ..baselines.fnz import fnz_query  # lazy import, avoids cycle
         return fnz_query(index, qL, qU)
     if cfg.use_query_split and cfg.skipping == "rqs":
-        rects = recursive_split(qL, qU, index.theta, cfg.k_maxsplit)
+        rects = recursive_split(qL, qU, index.curve, cfg.k_maxsplit)
     else:
         rects = [(qL, qU)]
     stats.subqueries = len(rects)
     # batched projection for every sub-query (Theorem 1)
     Ls = np.stack([r[0] for r in rects])
     Us = np.stack([r[1] for r in rects])
-    zlo = encode_np(Ls, index.theta)
-    zhi = encode_np(Us, index.theta)
+    zlo = index.curve.encode_np(Ls)
+    zhi = index.curve.encode_np(Us)
     plo = index.page_of(zlo)
     phi = index.page_of(zhi)
     stats.index_accesses += 2 * len(rects)

@@ -38,9 +38,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..dist.compat import shard_map
 from ..kernels.window_filter.ops import window_filter
+from .curve import as_curve
 from .index import LMSFCIndex
 from .split import recursive_split_jax, zranges_jax
-from .theta import Theta
 from .zorder64 import u64_to_z64, z64_le
 
 # ---------------------------------------------------------------------------
@@ -65,12 +65,16 @@ jax.tree_util.register_dataclass(
 
 
 def pack_serving_arrays(index: LMSFCIndex, pad_pages_to: int = 1,
-                        cap: int = None) -> ServingArrays:
+                        cap: int | None = None) -> ServingArrays:
     """Materialize padded page-major **host** (numpy) arrays from a built
     index.  Small-page regimes (large page counts) pack via one bulk flat
     scatter per dimension instead of a Python loop over pages — the loop
     used to dominate engine startup there; with few large pages the
     per-page block copy is pure memcpy and stays the faster path."""
+    if pad_pages_to is None or pad_pages_to < 1:
+        raise ValueError(f"pad_pages_to must be >= 1 (the page count is "
+                         f"rounded up to a multiple of it); got "
+                         f"{pad_pages_to!r}")
     Pn = index.num_pages
     d = index.d
     sizes = np.diff(index.starts).astype(np.int64)
@@ -117,7 +121,7 @@ def pack_serving_arrays(index: LMSFCIndex, pad_pages_to: int = 1,
 
 
 def build_serving_arrays(index: LMSFCIndex, pad_pages_to: int = 1,
-                         cap: int = None) -> ServingArrays:
+                         cap: int | None = None) -> ServingArrays:
     """Padded page-major device arrays from a built index."""
     host = pack_serving_arrays(index, pad_pages_to=pad_pages_to, cap=cap)
     return jax.tree.map(jnp.asarray, host)
@@ -134,19 +138,21 @@ def _u32_le(a, b):
     return (a ^ _SIGN) <= (b ^ _SIGN)
 
 
-def make_query_fn(theta: Theta, *, k_maxsplit: int = 4, max_cand: int = 64,
+def make_query_fn(curve, *, k_maxsplit: int = 4, max_cand: int = 64,
                   q_chunk: int = 16, backend: str = "xla",
                   interpret: bool = False):
     """Returns query_batch(arrays, queries (Q, d, 2) int32) -> (counts (Q,),
     overflowed (Q,) int32 overflow counts — 0/1 on a single shard, psum-
     additive across shards in the distributed engine).  Static shapes
-    throughout; Q % q_chunk == 0."""
+    throughout; Q % q_chunk == 0.  `curve` is any `MonotonicCurve`
+    (legacy `Theta` values are coerced)."""
+    curve = as_curve(curve)
 
     def _chunk(arrays: ServingArrays, queries):
         Qc = queries.shape[0]
         rects, valid = recursive_split_jax(
-            queries.astype(jnp.uint32), theta, k_maxsplit)
-        zlo, zhi = zranges_jax(rects, theta)          # (Qc, S, 2)
+            queries.astype(jnp.uint32), curve, k_maxsplit)
+        zlo, zhi = zranges_jax(rects, curve)          # (Qc, S, 2)
         # ---- prune: page z-range overlaps any live sub-query ------------
         pz_min = arrays.page_zmin                     # (P, 2)
         pz_max = arrays.page_zmax
@@ -202,13 +208,13 @@ def make_query_fn(theta: Theta, *, k_maxsplit: int = 4, max_cand: int = 64,
 # ---------------------------------------------------------------------------
 
 
-def make_distributed_query_fn(theta: Theta, mesh, *, k_maxsplit: int = 4,
+def make_distributed_query_fn(curve, mesh, *, k_maxsplit: int = 4,
                               max_cand: int = 64, q_chunk: int = 16,
                               backend: str = "xla", interpret: bool = False):
     """shard_map over all mesh axes: every device prunes/scans its own page
     shard for the full (replicated) query batch; counts are psum-reduced."""
     axes = tuple(mesh.axis_names)
-    local = make_query_fn(theta, k_maxsplit=k_maxsplit, max_cand=max_cand,
+    local = make_query_fn(curve, k_maxsplit=k_maxsplit, max_cand=max_cand,
                           q_chunk=q_chunk, backend=backend,
                           interpret=interpret)
 

@@ -3,6 +3,10 @@
 Encode = "scramble the bits of x according to θ" (paper §4.3).  The numpy
 path is the correctness oracle (and serves index *construction*); the JAX
 path is the TPU serving path (Z64 = (hi, lo) int32 pairs, see zorder64.py).
+
+This module is the θ-level backend; consumers should go through the
+`MonotonicCurve` protocol (core/curve.py), whose `GlobalTheta` delegates
+here and whose `PiecewiseCurve` composes these per-region.
 """
 from __future__ import annotations
 

@@ -1,10 +1,16 @@
-"""SMBO learning of the SFC parameter θ (paper §5.2, Algorithm 1).
+"""SMBO learning of the SFC parameter (paper §5.2, Algorithm 1), generic
+over the curve family.
 
 Surrogate = random forest (per the paper), acquisition = Expected
-Improvement, candidates = local transpositions of the incumbent + uniform
-random θ.  The objective is the deterministic scan-cost proxy of cost.py
-evaluated on (sampled) data + (sampled) workload — the paper's BatchEval
-with QueryTime replaced per DESIGN.md §4.
+Improvement, candidates = local perturbations of the incumbent + uniform
+random curves.  The search space is any registered `MonotonicCurve` family:
+``space="global"`` searches the paper's single-θ family, and
+``space="piecewise"`` searches BMTree-style quadtree curves with an
+independent θ per region (`depth` levels).  The objective is the
+deterministic scan-cost proxy of cost.py evaluated on (sampled) data +
+(sampled) workload — the paper's BatchEval with QueryTime replaced per
+DESIGN.md §4, vectorized over the whole workload by core/batcheval.py so
+larger pools/iterations stay affordable (BENCH_smbo.json).
 """
 from __future__ import annotations
 
@@ -13,10 +19,10 @@ import math
 
 import numpy as np
 
-from .cost import evaluate_theta
+from .cost import evaluate_curve
+from .curve import MonotonicCurve, init_curves, random_curve
 from .index import IndexConfig
 from .surrogate import RandomForest
-from .theta import Theta, major_order, neighbors, random_theta, zorder
 
 _SQRT2 = math.sqrt(2.0)
 
@@ -38,62 +44,75 @@ def expected_improvement(mu, sigma, best):
 
 @dataclasses.dataclass
 class SMBOResult:
-    theta_best: Theta
+    curve_best: MonotonicCurve
     y_best: float
     history: list          # (iteration, y_best)
-    evaluated: list        # (theta, y)
+    evaluated: list        # (curve, y)
+
+    @property
+    def theta_best(self) -> MonotonicCurve:
+        """Legacy alias from the single-θ era; holds the best *curve*
+        (accepted everywhere a θ used to be via `as_curve`)."""
+        return self.curve_best
 
 
 def learn_sfc(data: np.ndarray, Ls: np.ndarray, Us: np.ndarray, *,
-              K: int, cfg: IndexConfig = None, max_iters: int = 10,
-              n_init: int = 8, pool_size: int = 48, evals_per_iter: int = 4,
-              seed: int = 0, verbose: bool = False) -> SMBOResult:
-    """Algorithm 1.  data/workload should already be sampled by the caller
-    (the paper defaults to 5% of the data)."""
+              K: int, cfg: IndexConfig = None, space: str = "global",
+              depth: int = 1, max_iters: int = 10, n_init: int = 8,
+              pool_size: int = 48, evals_per_iter: int = 4, seed: int = 0,
+              verbose: bool = False,
+              evaluator: str = "batched") -> SMBOResult:
+    """Algorithm 1 over the chosen curve family.  data/workload should
+    already be sampled by the caller (the paper defaults to 5% of the
+    data); `depth` only applies to ``space="piecewise"``."""
     rng = np.random.default_rng(seed)
     d = data.shape[1]
     cfg = cfg or IndexConfig(paging="heuristic")
 
-    # --- line 1: initial design + surrogate ------------------------------
-    init = [zorder(d, K), major_order(d, K), major_order(d, K, list(reversed(range(d))))]
-    seen = {t.seq for t in init}
-    while len(init) < n_init:
-        t = random_theta(rng, d, K)
-        if t.seq not in seen:
-            seen.add(t.seq)
-            init.append(t)
+    def evaluate(c: MonotonicCurve) -> float:
+        return evaluate_curve(c, data, Ls, Us, cfg, K, evaluator=evaluator)
 
-    evaluated = [(t, evaluate_theta(t, data, Ls, Us, cfg, K)) for t in init]
+    # --- line 1: initial design + surrogate ------------------------------
+    init = init_curves(d, K, family=space, depth=depth)
+    seen = set(init)
+    while len(init) < n_init:
+        c = random_curve(rng, d, K, family=space, depth=depth)
+        if c not in seen:
+            seen.add(c)
+            init.append(c)
+
+    evaluated = [(c, evaluate(c)) for c in init]
     model = RandomForest(seed=seed)
     ybest_idx = int(np.argmin([y for _, y in evaluated]))
-    theta_best, y_best = evaluated[ybest_idx]
+    curve_best, y_best = evaluated[ybest_idx]
     history = [(0, y_best)]
 
     for it in range(1, max_iters + 1):
-        X = np.stack([t.features() for t, _ in evaluated])
+        X = np.stack([c.features() for c, _ in evaluated])
         y = np.asarray([v for _, v in evaluated])
         model.fit(X, y)
 
         # --- line 3: SelectCands via EI over a perturbation pool ---------
-        pool = neighbors(theta_best, rng, n=pool_size // 2, max_swaps=3)
-        pool += [random_theta(rng, d, K) for _ in range(pool_size - len(pool))]
-        pool = [t for t in pool if t.seq not in seen] or pool
-        Xp = np.stack([t.features() for t in pool])
+        pool = curve_best.neighbors(rng, n=pool_size // 2, max_swaps=3)
+        pool += [random_curve(rng, d, K, family=space, depth=depth)
+                 for _ in range(pool_size - len(pool))]
+        pool = [c for c in pool if c not in seen] or pool
+        Xp = np.stack([c.features() for c in pool])
         mu, sigma = model.predict(Xp)
         ei = expected_improvement(mu, sigma, y_best)
         top = np.argsort(-ei)[:evals_per_iter]
 
         # --- line 4: BatchEval -------------------------------------------
         for j in top:
-            t = pool[int(j)]
-            seen.add(t.seq)
-            yv = evaluate_theta(t, data, Ls, Us, cfg, K)
-            evaluated.append((t, yv))
+            c = pool[int(j)]
+            seen.add(c)
+            yv = evaluate(c)
+            evaluated.append((c, yv))
             if yv < y_best:
-                y_best, theta_best = yv, t
+                y_best, curve_best = yv, c
         history.append((it, y_best))
         if verbose:
             print(f"[smbo] iter {it}: best cost {y_best:.3f}")
 
-    return SMBOResult(theta_best=theta_best, y_best=y_best,
+    return SMBOResult(curve_best=curve_best, y_best=y_best,
                       history=history, evaluated=evaluated)

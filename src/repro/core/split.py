@@ -1,4 +1,4 @@
-"""Recursive query splitting (paper §6, Lemma 2).
+"""Recursive query splitting (paper §6, Lemma 2), generic over the curve.
 
 Optimal 1-split: for each dimension δ with qL^(δ) < qU^(δ), the best cut is
 v* = (qU^(δ) >> l) << l with l = MSB of qL^(δ) XOR qU^(δ); the split removes
@@ -6,9 +6,15 @@ the z-gap (f(L) − f(U)) from the scanned range, where
 U = (qU with δ ↦ v*−1) and L = (qL with δ ↦ v*).  Choose the δ with the
 largest positive gap; recurse up to k_maxsplit times.
 
-numpy path: per-query recursion (faithful to Algorithm 4, used by the CPU
-engine + SMBO cost evaluation).  JAX path: fully vectorized over a
-(Q, 2^k) static sub-query tensor with validity masks (TPU serving engine).
+Every entry point takes any `MonotonicCurve` (legacy `Theta` values are
+coerced via `as_curve`); the cut rule and gap evaluation are curve hooks.
+
+Three execution strategies, one algorithm:
+  * per-query recursion  — faithful to Algorithm 4 (CPU engine)
+  * numpy batch          — (Q, 2^k) static sub-query tensor with validity
+                           masks, identical leaf sets to the recursion
+                           (BatchEval / SMBO; see core/batcheval.py)
+  * JAX batch            — the same tensorization on device (TPU serving)
 """
 from __future__ import annotations
 
@@ -16,48 +22,22 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from .sfc import encode_jax, encode_np, encode_scalar
-from .theta import Theta
+from .curve import MonotonicCurve, as_curve
 from .zorder64 import z64_lt, z64_sub
 
 # ---------------------------------------------------------------------------
-# numpy (faithful Algorithm 4)
+# per-query recursion (faithful Algorithm 4)
 # ---------------------------------------------------------------------------
 
 
-def _msb(v: int) -> int:
-    return int(v).bit_length() - 1
-
-
-def optimal_1split(qL, qU, theta: Theta):
+def optimal_1split(qL, qU, curve):
     """Return (delta, v, gap) for the best single split, or None if no
-    positive-gap split exists.  Scalar-int hot path (called ~2^k times per
-    query by the recursion)."""
-    d = theta.d
-    qLl = [int(v) for v in qL]
-    qUl = [int(v) for v in qU]
-    best = None
-    for delta in range(d):
-        lo, up = qLl[delta], qUl[delta]
-        if lo >= up:
-            continue
-        l = (lo ^ up).bit_length() - 1
-        v = (up >> l) << l
-        U = list(qUl)
-        U[delta] = v - 1
-        L = list(qLl)
-        L[delta] = v
-        fU = encode_scalar(U, theta)
-        fL = encode_scalar(L, theta)
-        if fL > fU:
-            gap = fL - fU
-            if best is None or gap > best[2]:
-                best = (delta, v, gap)
-    return best
+    positive-gap split exists (delegates to the curve's split hook)."""
+    return as_curve(curve).optimal_1split(qL, qU)
 
 
-def _rsplit(qL: list, qU: list, theta: Theta, k: int, out: list):
-    best = optimal_1split(qL, qU, theta) if k > 0 else None
+def _rsplit(qL: list, qU: list, curve: MonotonicCurve, k: int, out: list):
+    best = curve.optimal_1split(qL, qU) if k > 0 else None
     if best is None:
         out.append((np.asarray(qL, np.uint64), np.asarray(qU, np.uint64)))
         return
@@ -66,15 +46,76 @@ def _rsplit(qL: list, qU: list, theta: Theta, k: int, out: list):
     U[delta] = v - 1
     L = list(qL)
     L[delta] = v
-    _rsplit(qL, U, theta, k - 1, out)
-    _rsplit(L, qU, theta, k - 1, out)
+    _rsplit(qL, U, curve, k - 1, out)
+    _rsplit(L, qU, curve, k - 1, out)
 
 
-def recursive_split(qL, qU, theta: Theta, k_maxsplit: int = 4):
+def recursive_split(qL, qU, curve, k_maxsplit: int = 4):
     """List of (qL, qU) uint64 sub-rectangles (Algorithm 4)."""
     out = []
-    _rsplit([int(v) for v in qL], [int(v) for v in qU], theta, k_maxsplit, out)
+    _rsplit([int(v) for v in qL], [int(v) for v in qU], as_curve(curve),
+            k_maxsplit, out)
     return out
+
+
+# ---------------------------------------------------------------------------
+# numpy batch (whole-workload splitting for BatchEval)
+# ---------------------------------------------------------------------------
+
+
+def _split_once_np(rects, valid, curve: MonotonicCurve):
+    """rects: (Q, S, d, 2) uint64 [lo, up]; valid: (Q, S) bool.
+    Returns (rects', valid') with S doubled.  Mirrors `_rsplit` exactly:
+    same cut rule, same strict-gap test, same first-max tie-break."""
+    d = curve.d
+    qL = rects[..., 0]  # (Q, S, d)
+    qU = rects[..., 1]
+    splittable = qL < qU
+    v = curve.split_cuts_np(qL, qU)  # placeholder 1 where not splittable
+
+    eye = np.eye(d, dtype=bool)
+    U_all = np.where(eye, (v - np.uint64(1))[..., :, None], qU[..., None, :])
+    L_all = np.where(eye, v[..., :, None], qL[..., None, :])
+    fU = curve.encode_np(U_all)  # (Q, S, d)
+    fL = curve.encode_np(L_all)
+    pos = (fL > fU) & splittable
+    gap = np.where(pos, fL - fU, np.uint64(0))
+    delta = np.argmax(gap, axis=-1)  # first max == recursion's strict >
+    any_split = pos.any(axis=-1) & valid
+
+    sel = np.arange(d) == delta[..., None]  # (Q, S, d)
+    v_sel = np.take_along_axis(v, delta[..., None], axis=-1)  # (Q, S, 1)
+
+    do = any_split[..., None]
+    child0_U = np.where(sel & do, v_sel - np.uint64(1), qU)
+    child1_L = np.where(sel & do, v_sel, qL)
+
+    c0 = np.stack([qL, child0_U], axis=-1)  # (Q, S, d, 2)
+    c1 = np.stack([child1_L, qU], axis=-1)
+    rects2 = np.stack([c0, c1], axis=2)  # (Q, S, 2, d, 2)
+    valid2 = np.stack([valid, any_split], axis=2)  # (Q, S, 2)
+
+    Q, S = valid.shape
+    return rects2.reshape(Q, 2 * S, d, 2), valid2.reshape(Q, 2 * S)
+
+
+def recursive_split_np_batch(Ls, Us, curve, k_maxsplit: int = 4):
+    """Whole-workload splitting: (Q, d) uint64 bounds ->
+    (rects (Q, 2^k, d, 2) uint64, valid (Q, 2^k) bool).
+
+    The valid leaves equal `recursive_split`'s output per query (a node that
+    cannot split carries its rect forward in child 0 with child 1 invalid,
+    and re-attempting a split is deterministic), so stats derived from the
+    leaf multiset — index accesses, candidate pages — match the recursion.
+    """
+    curve = as_curve(curve)
+    Ls = np.asarray(Ls, dtype=np.uint64)
+    Us = np.asarray(Us, dtype=np.uint64)
+    rects = np.stack([Ls, Us], axis=-1)[:, None]  # (Q, 1, d, 2)
+    valid = np.ones(rects.shape[:2], dtype=bool)
+    for _ in range(k_maxsplit):
+        rects, valid = _split_once_np(rects, valid, curve)
+    return rects, valid
 
 
 # ---------------------------------------------------------------------------
@@ -92,23 +133,23 @@ def _msb_jax(v):
     return lax.population_count(v).astype(jnp.uint32) - jnp.uint32(1)
 
 
-def _split_once(rects, valid, theta: Theta):
+def _split_once(rects, valid, curve: MonotonicCurve):
     """rects: (Q, S, d, 2) uint32 [lo, up]; valid: (Q, S) bool.
     Returns (rects', valid') with S doubled."""
-    d = theta.d
+    d = curve.d
     qL = rects[..., 0]  # (Q, S, d)
     qU = rects[..., 1]
     splittable = qL < qU
     x = qL ^ qU
     l = _msb_jax(jnp.maximum(x, jnp.uint32(1)))
-    v = jnp.right_shift(qU, l) << l  # candidate cut per dim
+    v = jnp.right_shift(qU, l) << l  # candidate cut per dim (Lemma 2)
 
     # corner points per candidate dim delta: (Q, S, d_delta, d_coord)
     eye = jnp.eye(d, dtype=bool)
     U_all = jnp.where(eye, (v - jnp.uint32(1))[..., :, None], qU[..., None, :])
     L_all = jnp.where(eye, v[..., :, None], qL[..., None, :])
-    fU = encode_jax(U_all.astype(jnp.int32), theta)  # (Q, S, d, 2)
-    fL = encode_jax(L_all.astype(jnp.int32), theta)
+    fU = curve.encode_jax(U_all.astype(jnp.int32))  # (Q, S, d, 2)
+    fL = curve.encode_jax(L_all.astype(jnp.int32))
     pos = z64_lt(fU, fL) & splittable  # (Q, S, d)
     gap = z64_sub(fL, fU)
     ghi = jnp.where(pos, gap[..., 0].astype(jnp.uint32), jnp.uint32(0))
@@ -139,18 +180,20 @@ def _split_once(rects, valid, theta: Theta):
     return (rects2.reshape(Q, 2 * S, d, 2), valid2.reshape(Q, 2 * S))
 
 
-def recursive_split_jax(queries, theta: Theta, k_maxsplit: int = 4):
+def recursive_split_jax(queries, curve, k_maxsplit: int = 4):
     """queries: (Q, d, 2) uint32 -> (rects (Q, 2^k, d, 2) uint32,
     valid (Q, 2^k) bool)."""
+    curve = as_curve(curve)
     rects = queries[:, None].astype(jnp.uint32)  # (Q, 1, d, 2)
     valid = jnp.ones(rects.shape[:2], bool)
     for _ in range(k_maxsplit):
-        rects, valid = _split_once(rects, valid, theta)
+        rects, valid = _split_once(rects, valid, curve)
     return rects, valid
 
 
-def zranges_jax(rects, theta: Theta):
+def zranges_jax(rects, curve):
     """Z64 ranges for each sub-query: (zlo, zhi), each (..., 2) int32."""
-    zlo = encode_jax(rects[..., 0].astype(jnp.int32), theta)
-    zhi = encode_jax(rects[..., 1].astype(jnp.int32), theta)
+    curve = as_curve(curve)
+    zlo = curve.encode_jax(rects[..., 0].astype(jnp.int32))
+    zhi = curve.encode_jax(rects[..., 1].astype(jnp.int32))
     return zlo, zhi

@@ -48,13 +48,18 @@ class Theta:
 
     @property
     def bit_of_pos(self) -> np.ndarray:
-        """(Kd,) source bit index j (within its dimension) at position l."""
+        """(Kd,) source bit index j (within its dimension) at position l.
+
+        out[l] = rank of l among the positions owned by seq[l].  A stable
+        argsort groups each dimension's K positions contiguously in position
+        order, so the within-group rank is just the sorted index mod K (this
+        runs once per SMBO candidate per surrogate fit — the per-position
+        Python counter loop it replaces showed up in learn_sfc profiles).
+        """
         seq = self.dim_of_pos
-        out = np.zeros_like(seq)
-        counters = np.zeros(self.d, dtype=np.int32)
-        for l, i in enumerate(seq):
-            out[l] = counters[i]
-            counters[i] += 1
+        out = np.empty_like(seq)
+        out[np.argsort(seq, kind="stable")] = \
+            np.arange(seq.size, dtype=np.int32) % self.K
         return out
 
     @property

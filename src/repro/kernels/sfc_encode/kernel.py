@@ -1,8 +1,17 @@
-"""Pallas TPU kernel: monotonic-SFC bit scramble (z-address encode).
+"""Pallas TPU kernels: monotonic-SFC bit scramble (z-address encode).
 
 Layout is transposed to (d, n) so the point axis rides the 128-wide VPU
-lanes (d is tiny: 2–4).  θ is static — the ≤64-step shift/and/or chain is
+lanes (d is tiny: 2–4).  The curve is static — the shift/and/or chains are
 fully unrolled and constant-folded.  Output is Z64: (2, n) int32 (hi, lo).
+
+Two kernel bodies, dispatched on the curve kind:
+
+  global     — one ≤64-step chain (the paper's single θ)
+  piecewise  — region code from the top `depth` bits of every dimension,
+               the shared monotone prefix emitted once into the top output
+               positions, then one low-bit chain per region merged with a
+               region-mask select (regions are static, so XLA folds the
+               per-leaf constants; R·d·(K-depth) + d·depth total bit ops)
 
 VMEM budget per program: d·block_n·4 B in + 2·block_n·4 B out; with
 block_n = 2048 and d = 4 that is 48 KiB — far under the ~16 MiB/core VMEM.
@@ -16,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from ...core.theta import Theta
+from ...core.curve import GlobalTheta, PiecewiseCurve, as_curve
 
 
 def _encode_kernel(x_ref, out_ref, *, dim, bit):
@@ -33,17 +42,77 @@ def _encode_kernel(x_ref, out_ref, *, dim, bit):
     out_ref[1, :] = lo
 
 
-@functools.partial(jax.jit, static_argnames=("theta", "block_n", "interpret"))
-def sfc_encode_dn(x_dn, theta: Theta, block_n: int = 2048,
+def _place(hi, lo, b, pos):
+    """OR bit-vector b into output position pos of the (hi, lo) pair."""
+    if pos < 32:
+        return hi, lo | (b << np.int32(pos))
+    return hi | (b << np.int32(pos - 32)), lo
+
+
+def _encode_piecewise_kernel(x_ref, out_ref, *, d, depth, low, prefix_dims,
+                             leaf_dims, leaf_bits):
+    """x_ref: (d, block_n) int32; out_ref: (2, block_n) int32.
+
+    prefix_dims: tuple of d*depth dims (region bit m reads dim
+    prefix_dims[m], source bit low + m//d); leaf_dims/leaf_bits: per-region
+    tuples of the d*low low-position assignments."""
+    n_low = d * low
+    zeros = jnp.zeros_like(x_ref[0, :])
+    # region code + shared monotone prefix (top t·d output bits)
+    r = zeros
+    hi, lo = zeros, zeros
+    for m in range(d * depth):
+        b = (x_ref[prefix_dims[m], :] >> np.int32(low + m // d)) & 1
+        r = r | (b << np.int32(m))
+        hi, lo = _place(hi, lo, b, n_low + m)
+    # per-region low-bit chains, merged by region mask
+    for leaf in range(len(leaf_dims)):
+        lhi, llo = zeros, zeros
+        for l in range(n_low):
+            b = (x_ref[leaf_dims[leaf][l], :] >> np.int32(leaf_bits[leaf][l])) & 1
+            lhi, llo = _place(lhi, llo, b, l)
+        sel = r == leaf
+        hi = hi | jnp.where(sel, lhi, 0)
+        lo = lo | jnp.where(sel, llo, 0)
+    out_ref[0, :] = hi
+    out_ref[1, :] = lo
+
+
+def _kernel_body(curve):
+    """Static kernel body for a curve (dispatch point for new curve kinds)."""
+    if isinstance(curve, GlobalTheta):
+        theta = curve.theta
+        return functools.partial(
+            _encode_kernel,
+            dim=tuple(int(v) for v in theta.dim_of_pos),
+            bit=tuple(int(v) for v in theta.bit_of_pos))
+    if isinstance(curve, PiecewiseCurve):
+        low = curve.K - curve.depth
+        leaf_dims, leaf_bits = [], []
+        for rcode in range(curve.num_regions):
+            ft = curve.full_theta(rcode)
+            leaf_dims.append(tuple(int(v) for v in ft.dim_of_pos[:curve.d * low]))
+            leaf_bits.append(tuple(int(v) for v in ft.bit_of_pos[:curve.d * low]))
+        return functools.partial(
+            _encode_piecewise_kernel,
+            d=curve.d, depth=curve.depth, low=low,
+            prefix_dims=tuple(curve.prefix_order[m % curve.d]
+                              for m in range(curve.d * curve.depth)),
+            leaf_dims=tuple(leaf_dims), leaf_bits=tuple(leaf_bits))
+    raise TypeError(f"no sfc_encode kernel for curve kind "
+                    f"{type(curve).__name__!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("curve", "block_n", "interpret"))
+def sfc_encode_dn(x_dn, curve, block_n: int = 2048,
                   interpret: bool = False):
-    """x_dn: (d, n) int32, n % block_n == 0 -> (2, n) int32 Z64."""
+    """x_dn: (d, n) int32, n % block_n == 0 -> (2, n) int32 Z64.
+    `curve` is any `MonotonicCurve` (or a legacy `Theta`)."""
+    curve = as_curve(curve)
     d, n = x_dn.shape
     assert n % block_n == 0, "caller pads n to a block multiple"
-    kern = functools.partial(_encode_kernel,
-                             dim=tuple(int(v) for v in theta.dim_of_pos),
-                             bit=tuple(int(v) for v in theta.bit_of_pos))
     return pl.pallas_call(
-        kern,
+        _kernel_body(curve),
         grid=(n // block_n,),
         in_specs=[pl.BlockSpec((d, block_n), lambda i: (0, i))],
         out_specs=pl.BlockSpec((2, block_n), lambda i: (0, i)),

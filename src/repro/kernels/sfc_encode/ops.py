@@ -1,21 +1,23 @@
 """jit'd public wrapper: accepts (n, d) points, pads, dispatches to the
-Pallas kernel (TPU) or the pure-jnp reference (XLA backend / CPU)."""
+curve's Pallas kernel (TPU) or the pure-jnp reference (XLA backend / CPU)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ...core.theta import Theta
+from ...core.curve import as_curve
 from .kernel import sfc_encode_dn
 from .ref import sfc_encode_ref
 
 
-def sfc_encode(x, theta: Theta, *, backend: str = "xla",
+def sfc_encode(x, curve, *, backend: str = "xla",
                block_n: int = 2048, interpret: bool = False):
-    """x: (n, d) int32 -> (n, 2) int32 Z64."""
+    """x: (n, d) int32 -> (n, 2) int32 Z64.  `curve` is any
+    `MonotonicCurve` (legacy `Theta` values are coerced)."""
+    curve = as_curve(curve)
     if backend == "xla":
-        return sfc_encode_ref(x, theta)
+        return sfc_encode_ref(x, curve)
     n, d = x.shape
     pad = (-n) % block_n
     x_dn = jnp.pad(x, ((0, pad), (0, 0))).T  # (d, n+pad)
-    z = sfc_encode_dn(x_dn, theta, block_n=block_n, interpret=interpret)
+    z = sfc_encode_dn(x_dn, curve, block_n=block_n, interpret=interpret)
     return z.T[:n]

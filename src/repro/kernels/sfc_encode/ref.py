@@ -1,22 +1,10 @@
-"""Pure-jnp oracle for the SFC bit-scramble encode kernel."""
+"""Pure-jnp oracle for the SFC encode kernels (any curve kind)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-import numpy as np
-
-from ...core.theta import Theta
+from ...core.curve import as_curve
 
 
-def sfc_encode_ref(x, theta: Theta):
-    """x: (n, d) int32 (unsigned semantics) -> (n, 2) int32 Z64 (hi, lo)."""
-    dim = theta.dim_of_pos
-    bit = theta.bit_of_pos
-    lo = jnp.zeros(x.shape[:-1], jnp.int32)
-    hi = jnp.zeros(x.shape[:-1], jnp.int32)
-    for l in range(theta.d * theta.K):
-        b = (x[..., dim[l]] >> np.int32(bit[l])) & 1
-        if l < 32:
-            lo = lo | (b << np.int32(l))
-        else:
-            hi = hi | (b << np.int32(l - 32))
-    return jnp.stack([hi, lo], axis=-1)
+def sfc_encode_ref(x, curve):
+    """x: (n, d) int32 (unsigned semantics) -> (n, 2) int32 Z64 (hi, lo).
+    `curve` is any `MonotonicCurve` (or a legacy `Theta`)."""
+    return as_curve(curve).encode_jax(x)

@@ -1,0 +1,362 @@
+"""The pluggable curve layer: Theorem-1 properties, cross-engine parity,
+batched-vs-legacy BatchEval equality, and the piecewise-beats-global
+acceptance experiment."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import zorder64 as z64
+from repro.core.batcheval import run_workload_batched
+from repro.core.cost import evaluate_curve, workload_cost
+from repro.core.curve import (GlobalTheta, PiecewiseCurve, as_curve,
+                              curve_from_json)
+from repro.core.index import IndexConfig, LMSFCIndex
+from repro.core.query import brute_force_count, run_workload
+from repro.core.serve import build_serving_arrays, make_query_fn, \
+    pack_serving_arrays
+from repro.core.smbo import learn_sfc
+from repro.core.split import recursive_split, recursive_split_np_batch
+from repro.core.theta import Theta, default_K, random_theta, zorder
+from repro.data.synth import make_dataset
+from repro.data.workload import make_workload
+
+
+def _random_piecewise(rng, d, K, depth=1):
+    return PiecewiseCurve.random(rng, d, K, depth=depth)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 + round-trip properties (deterministic sweep; the hypothesis
+# variant below fuzzes shapes/depths further when the dev dep is installed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,depth", [(2, 1), (2, 2), (3, 1), (4, 1)])
+def test_piecewise_monotone_and_roundtrip(d, depth):
+    K = default_K(d)
+    rng = np.random.default_rng(d * 31 + depth)
+    for trial in range(5):
+        pc = _random_piecewise(rng, d, K, depth=depth)
+        xs = rng.integers(0, 2**K, size=(256, d), dtype=np.uint64)
+        z = pc.encode_np(xs)
+        np.testing.assert_array_equal(pc.decode_np(z), xs)
+        # Theorem 1: a <= b componentwise => f(a) <= f(b)
+        a = np.minimum(xs[:128], xs[128:])
+        b = np.maximum(xs[:128], xs[128:])
+        assert np.all(pc.encode_np(a) <= pc.encode_np(b))
+        # boundary-straddling pairs (region changes are the risky case)
+        half = np.uint64(2 ** (K - 1))
+        a2 = np.minimum(xs[:128], half - np.uint64(1))
+        b2 = np.maximum(xs[128:], half)
+        assert np.all(pc.encode_np(a2) <= pc.encode_np(b2))
+
+
+def test_piecewise_encode_paths_agree():
+    """numpy oracle == python-int scalar == JAX Z64, per region."""
+    rng = np.random.default_rng(3)
+    for d in (2, 3):
+        K = default_K(d)
+        pc = _random_piecewise(rng, d, K, depth=1)
+        xs = rng.integers(0, 2**K, size=(200, d), dtype=np.uint64)
+        z = pc.encode_np(xs)
+        for row, zz in zip(xs[:32], z[:32]):
+            assert pc.encode_scalar(row) == int(zz)
+        zj = np.asarray(pc.encode_jax(
+            jnp.asarray(xs.astype(np.uint32).view(np.int32))))
+        np.testing.assert_array_equal(z64.z64_to_u64(zj), z)
+
+
+def test_piecewise_region_prefix_is_top_bits():
+    """The region code must equal the top d*depth bits of the address —
+    that is what makes the inter-region prefix monotone."""
+    rng = np.random.default_rng(5)
+    d, K, depth = 2, 10, 2
+    pc = _random_piecewise(rng, d, K, depth=depth)
+    xs = rng.integers(0, 2**K, size=(128, d), dtype=np.uint64)
+    z = pc.encode_np(xs)
+    np.testing.assert_array_equal(z >> np.uint64(d * (K - depth)),
+                                  pc.region_np(xs))
+
+
+def test_global_theta_matches_legacy_sfc():
+    from repro.core import sfc
+    rng = np.random.default_rng(0)
+    d, K = 3, default_K(3)
+    theta = random_theta(rng, d, K)
+    g = as_curve(theta)
+    assert isinstance(g, GlobalTheta)
+    xs = rng.integers(0, 2**K, size=(100, d), dtype=np.uint64)
+    np.testing.assert_array_equal(g.encode_np(xs), sfc.encode_np(xs, theta))
+    np.testing.assert_array_equal(g.decode_np(g.encode_np(xs)), xs)
+
+
+def test_curve_json_roundtrip():
+    rng = np.random.default_rng(9)
+    for c in [GlobalTheta(zorder(2, 8)),
+              GlobalTheta(random_theta(rng, 3, 7)),
+              _random_piecewise(rng, 2, 8, depth=1),
+              _random_piecewise(rng, 3, 6, depth=1),
+              PiecewiseCurve.random(rng, 2, 8, depth=2,
+                                    prefix_order=(1, 0))]:
+        back = curve_from_json(c.to_json())
+        assert back == c and hash(back) == hash(c)
+        assert as_curve(c.to_json()) == c
+
+
+def test_piecewise_validation():
+    with pytest.raises(ValueError, match="depth"):
+        PiecewiseCurve(2, 8, 0, ())
+    with pytest.raises(ValueError, match="leaf"):
+        PiecewiseCurve(2, 8, 1, (zorder(2, 7),) * 3)
+    with pytest.raises(ValueError, match="Theta"):
+        PiecewiseCurve(2, 8, 1, (zorder(2, 6),) * 4)
+    with pytest.raises(ValueError, match="prefix_order"):
+        PiecewiseCurve(2, 8, 1, (zorder(2, 7),) * 4, prefix_order=(0, 0))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzzing (optional dev dep, exercised in CI)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+if HAVE_HYP:
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(2, 4), st.integers(1, 2), st.integers(0, 2**32 - 1),
+           st.data())
+    def test_hyp_piecewise_theorem1_and_roundtrip(d, depth, seed, data):
+        K = default_K(d)
+        depth = min(depth, max(1, 31 // d - 1), K - 1)
+        rng = np.random.default_rng(seed)
+        pc = PiecewiseCurve.random(rng, d, K, depth=depth)
+        xs = rng.integers(0, 2**K, size=(64, d), dtype=np.uint64)
+        z = pc.encode_np(xs)
+        np.testing.assert_array_equal(pc.decode_np(z), xs)
+        a = np.minimum(xs[:32], xs[32:])
+        b = np.maximum(xs[:32], xs[32:])
+        assert np.all(pc.encode_np(a) <= pc.encode_np(b))
+
+
+# ---------------------------------------------------------------------------
+# split + BatchEval parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["global", "piecewise"])
+def test_batched_split_matches_recursion(family):
+    rng = np.random.default_rng(11)
+    d, K = 2, 10
+    curve = (GlobalTheta(random_theta(rng, d, K)) if family == "global"
+             else _random_piecewise(rng, d, K))
+    Ls = rng.integers(0, 2**K - 64, size=(40, d)).astype(np.uint64)
+    Us = Ls + rng.integers(1, 64, size=(40, d)).astype(np.uint64)
+    rects, valid = recursive_split_np_batch(Ls, Us, curve, k_maxsplit=4)
+    for q in range(len(Ls)):
+        want = recursive_split(Ls[q], Us[q], curve, 4)
+        got = {tuple(map(int, np.concatenate([rects[q, s, :, 0],
+                                              rects[q, s, :, 1]])))
+               for s in range(rects.shape[1]) if valid[q, s]}
+        assert got == {tuple(map(int, np.concatenate([l, u])))
+                       for l, u in want}
+
+
+@pytest.mark.parametrize("name,family", [
+    ("osm", "global"), ("osm", "piecewise"),
+    ("nyc", "piecewise"), ("stock", "global"),
+])
+def test_batched_workload_matches_legacy_exactly(name, family):
+    """Counts AND every mechanical statistic agree between the per-query
+    evaluator and the whole-workload batched one, so SMBO cost values are
+    identical to the last ulp."""
+    rng = np.random.default_rng(1)
+    data = make_dataset(name, 2500, seed=0)
+    d = data.shape[1]
+    K = default_K(d)
+    curve = (GlobalTheta(random_theta(rng, d, K)) if family == "global"
+             else _random_piecewise(rng, d, K))
+    Ls, Us = make_workload(data, 40, seed=2, K=K)
+    idx = LMSFCIndex.build(data, curve=curve,
+                           cfg=IndexConfig(paging="heuristic",
+                                           page_bytes=2048),
+                           workload=(Ls, Us))
+    c_legacy, a_legacy = run_workload(idx, Ls, Us)
+    c_batch, a_batch = run_workload_batched(idx, Ls, Us)
+    np.testing.assert_array_equal(c_legacy, c_batch)
+    assert a_legacy == a_batch
+    assert workload_cost(idx, Ls, Us, "legacy").total == \
+        workload_cost(idx, Ls, Us, "batched").total
+
+
+def test_evaluate_curve_identical_across_evaluators():
+    rng = np.random.default_rng(2)
+    data = make_dataset("osm", 2000, seed=3)
+    K = default_K(2)
+    Ls, Us = make_workload(data, 24, seed=4, K=K)
+    cfg = IndexConfig(paging="heuristic", page_bytes=1024)
+    for c in [GlobalTheta(zorder(2, K)), _random_piecewise(rng, 2, K)]:
+        y_legacy = evaluate_curve(c, data, Ls, Us, cfg, K, evaluator="legacy")
+        y_batch = evaluate_curve(c, data, Ls, Us, cfg, K, evaluator="batched")
+        assert y_legacy == y_batch  # to the last ulp
+
+
+# ---------------------------------------------------------------------------
+# cross-engine count parity under a piecewise curve
+# ---------------------------------------------------------------------------
+
+
+def test_cross_engine_parity_piecewise():
+    """cpu / xla / pallas(interpret) agree with brute force under a
+    PiecewiseCurve — the serving hot path is genuinely curve-generic."""
+    from repro.api import Database, EngineConfig
+    rng = np.random.default_rng(4)
+    data = make_dataset("osm", 3000, seed=0)
+    d = data.shape[1]
+    K = default_K(d)
+    curve = _random_piecewise(rng, d, K, depth=1)
+    Ls, Us = make_workload(data, 24, seed=0, K=K)
+    want = np.asarray([brute_force_count(data, l, u)
+                       for l, u in zip(Ls, Us)])
+    idx = LMSFCIndex.build(data, curve=curve,
+                           cfg=IndexConfig(paging="heuristic",
+                                           page_bytes=2048),
+                           workload=(Ls, Us))
+    db = Database(idx)
+    for engine, kw in [("cpu", {}),
+                       ("xla", dict(max_cand=max(64, idx.num_pages),
+                                    q_chunk=8)),
+                       ("pallas", dict(max_cand=max(64, idx.num_pages),
+                                       q_chunk=8, interpret=True))]:
+        res = db.query((Ls, Us), engine=engine) if not kw else \
+            db.engine(engine, EngineConfig(**kw)).query((Ls, Us))
+        assert res.exact, engine
+        np.testing.assert_array_equal(res.counts, want, err_msg=engine)
+
+
+def test_database_fit_curve_roundtrip():
+    """fit(curve=...) accepts a family, an instance, and serialized JSON;
+    the JSON round-trip reproduces identical query behavior."""
+    from repro.api import Database
+    rng = np.random.default_rng(6)
+    data = make_dataset("osm", 2000, seed=1)
+    K = default_K(2)
+    Ls, Us = make_workload(data, 16, seed=1, K=K)
+    want = np.asarray([brute_force_count(data, l, u)
+                       for l, u in zip(Ls, Us)])
+
+    db = Database.fit(data, workload=(Ls, Us), curve="piecewise",
+                      smbo=dict(max_iters=1, n_init=4, evals_per_iter=1))
+    assert isinstance(db.curve, PiecewiseCurve)
+    np.testing.assert_array_equal(db.query((Ls, Us)).counts, want)
+
+    blob = db.curve.to_json()
+    db2 = Database.fit(data, workload=(Ls, Us), curve=blob)
+    assert db2.curve == db.curve and db2.fit_result is None
+    np.testing.assert_array_equal(db2.query((Ls, Us)).counts, want)
+
+    db3 = Database.fit(data, curve=_random_piecewise(rng, 2, K))
+    np.testing.assert_array_equal(db3.query((Ls, Us)).counts, want)
+
+
+def test_database_fit_curve_arg_validation():
+    from repro.api import Database
+    data = make_dataset("osm", 600, seed=7)
+    K = default_K(2)
+    with pytest.raises(ValueError, match="unknown curve family"):
+        Database.fit(data, curve="peicewise")
+    rng = np.random.default_rng(12)
+    pinned = _random_piecewise(rng, 2, K)
+    with pytest.raises(ValueError, match="conflicts"):
+        Database.fit(data, curve=pinned, K=K - 1)
+
+
+def test_legacy_theta_surface_still_works():
+    """Pre-curve call sites: build(theta=), make_query_fn(Theta), and
+    index.theta on a global index; clear errors on a piecewise one."""
+    rng = np.random.default_rng(8)
+    data = make_dataset("osm", 1500, seed=2)
+    K = default_K(2)
+    theta = random_theta(rng, 2, K)
+    Ls, Us = make_workload(data, 8, seed=3, K=K)
+    idx = LMSFCIndex.build(data, theta=theta, workload=(Ls, Us), K=K)
+    assert idx.theta == theta
+    arrays = build_serving_arrays(idx)
+    qfn = make_query_fn(theta, max_cand=idx.num_pages, q_chunk=8)
+    q = jnp.asarray(np.stack([Ls, Us], -1).astype(np.uint32).view(np.int32))
+    counts, _ = jax.jit(qfn)(arrays, q)
+    want = np.asarray([brute_force_count(data, l, u)
+                       for l, u in zip(Ls, Us)])
+    np.testing.assert_array_equal(np.asarray(counts), want)
+
+    pw = LMSFCIndex.build(data, curve=_random_piecewise(rng, 2, K))
+    with pytest.raises(AttributeError, match="no single"):
+        pw.theta
+    with pytest.raises(ValueError, match="not both"):
+        LMSFCIndex.build(data, theta=theta, curve=GlobalTheta(theta))
+
+
+def test_fnz_requires_global_curve():
+    rng = np.random.default_rng(10)
+    data = make_dataset("osm", 1200, seed=4)
+    K = default_K(2)
+    idx = LMSFCIndex.build(data, curve=_random_piecewise(rng, 2, K),
+                           cfg=IndexConfig(skipping="fnz"))
+    from repro.core.query import query_count
+    with pytest.raises(TypeError, match="GlobalTheta"):
+        query_count(idx, np.zeros(2, np.uint64), np.full(2, 10, np.uint64))
+
+
+def test_pack_serving_arrays_validates_pad_pages_to():
+    data = make_dataset("osm", 800, seed=5)
+    idx = LMSFCIndex.build(data)
+    with pytest.raises(ValueError, match="pad_pages_to"):
+        pack_serving_arrays(idx, pad_pages_to=0)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: a piecewise search space beats the best global θ on a
+# quadrant-skewed data/workload pair
+# ---------------------------------------------------------------------------
+
+
+def _quadrant_skewed_pair(seed=7, d=2, K=8, n=5000, n_q=20):
+    """Quadrant (0,0) queries are wide in dim0/narrow in dim1; quadrant
+    (1,1) queries are the opposite.  One global bit permutation must
+    compromise between the two demands; a depth-1 piecewise curve can give
+    each quadrant its own ordering."""
+    rng = np.random.default_rng(seed)
+    dom = 2**K
+    half = dom // 2
+    data = np.unique(rng.integers(0, dom, size=(n, d), dtype=np.uint64),
+                     axis=0)
+
+    def quad(nq, xr, yr, wx, wy):
+        cx = rng.integers(xr[0] + wx // 2, xr[1] - wx // 2, size=nq)
+        cy = rng.integers(yr[0] + wy // 2, yr[1] - wy // 2, size=nq)
+        L = np.stack([cx - wx // 2, cy - wy // 2], 1).astype(np.uint64)
+        U = np.stack([cx + wx // 2, cy + wy // 2], 1).astype(np.uint64)
+        return L, U
+
+    L1, U1 = quad(n_q, (0, half), (0, half), 100, 4)
+    L2, U2 = quad(n_q, (half, dom), (half, dom), 4, 100)
+    return data, np.concatenate([L1, L2]), np.concatenate([U1, U2])
+
+
+def test_learned_piecewise_beats_best_global():
+    data, Ls, Us = _quadrant_skewed_pair()
+    K = 8
+    cfg = IndexConfig(paging="heuristic", page_bytes=512)
+    res_g = learn_sfc(data, Ls, Us, K=K, cfg=cfg, space="global",
+                      max_iters=6, n_init=8, evals_per_iter=4, seed=0)
+    res_p = learn_sfc(data, Ls, Us, K=K, cfg=cfg, space="piecewise", depth=1,
+                      max_iters=12, n_init=10, evals_per_iter=6, seed=0)
+    assert isinstance(res_p.curve_best, PiecewiseCurve)
+    assert res_p.y_best <= res_g.y_best
+    # and the adaptation is substantial on this pair, not a tie
+    assert res_p.y_best < 0.9 * res_g.y_best
