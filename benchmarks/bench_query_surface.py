@@ -1,0 +1,125 @@
+"""Query-surface benchmark + parity gate: the typed algebra across engines.
+
+Runs the survey workload mix — COUNT, RANGE retrieval, POINT lookup, and
+kNN — through the cpu and xla engines of a `repro.api.Database` on a small
+synthetic workload, hard-asserting cross-engine parity (retrieved row sets
+bit-equal, kNN equal to the brute-force numpy oracle) before reporting
+per-type wall-clock.  Any parity break exits non-zero, so the CI
+`query-surface-smoke` job gates on exactness, not speed.
+
+Writes BENCH_query_surface.json (uploaded as a CI artifact).
+
+    PYTHONPATH=src python benchmarks/bench_query_surface.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.api import Count, Database, EngineConfig, Knn, Point, Range
+from repro.api.deltas import rows_in_set
+from repro.core.index import IndexConfig
+from repro.core.query import brute_force_knn, brute_force_range
+from repro.core.theta import default_K
+from repro.data.synth import make_dataset
+from repro.data.workload import make_workload
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the CI job")
+    ap.add_argument("--out", default="BENCH_query_surface.json")
+    ap.add_argument("--dataset", default="osm")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--n-q", type=int, default=None)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    n = args.n or (3000 if args.smoke else 50_000)
+    n_q = args.n_q or (16 if args.smoke else 64)
+    data = make_dataset(args.dataset, n, seed=args.seed)
+    K = default_K(data.shape[1])
+    Ls, Us = make_workload(data, n_q, seed=args.seed + 1, K=K)
+    print(f"dataset={args.dataset} n={len(data)} d={data.shape[1]} "
+          f"queries={n_q} k={args.k}")
+
+    db = Database.fit(data, (Ls, Us), K=K, learn=False,
+                      cfg=IndexConfig(paging="heuristic", page_bytes=2048))
+    db.engine("xla", EngineConfig(q_chunk=8))
+    # mutate so the parity gate also covers the delta/tombstone path
+    rng = np.random.default_rng(args.seed + 2)
+    new = np.unique(rng.integers(0, 2**K, size=(max(20, n // 50),
+                                                data.shape[1]),
+                                 dtype=np.uint64), axis=0)
+    new = new[~rows_in_set(new, data)]
+    db.insert(new)
+    dead = np.stack([data[1], new[0]])
+    db.delete(dead)
+    logical = np.concatenate([data, new])
+    logical = np.unique(logical[~rows_in_set(logical, dead)], axis=0)
+    centers = np.concatenate(
+        [data[rng.integers(0, len(data), size=max(1, n_q // 2))],
+         rng.integers(0, 2**K, size=(n_q - n_q // 2, data.shape[1]),
+                      dtype=np.uint64)])
+
+    report = {"n": len(data), "n_q": n_q, "k": args.k,
+              "dataset": args.dataset, "timings_s": {}}
+    results = {}
+    for name in ("cpu", "xla"):
+        t = report["timings_s"][name] = {}
+        results[name] = {}
+        results[name]["count"], t["count"] = timed(
+            lambda: db.query(Count(Ls, Us), engine=name))
+        results[name]["range"], t["range"] = timed(
+            lambda: db.query(Range(Ls, Us), engine=name))
+        results[name]["point"], t["point"] = timed(
+            lambda: db.query(Point(logical[:: max(1, len(logical) // n_q)]),
+                             engine=name))
+        results[name]["knn"], t["knn"] = timed(
+            lambda: db.query(Knn(centers, k=args.k), engine=name))
+        print(f"[{name:4s}] " + "  ".join(
+            f"{kind}={t[kind]*1e3:8.1f}ms" for kind in
+            ("count", "range", "point", "knn")))
+
+    # ---- parity gate (exit non-zero on any break) -------------------------
+    for kind in ("count", "range", "point", "knn"):
+        a, b = results["cpu"][kind], results["xla"][kind]
+        assert a.exact and b.exact, kind
+    np.testing.assert_array_equal(results["cpu"]["count"].counts,
+                                  results["xla"]["count"].counts)
+    np.testing.assert_array_equal(results["cpu"]["point"].found,
+                                  results["xla"]["point"].found)
+    for i, (qL, qU) in enumerate(zip(Ls, Us)):
+        want = brute_force_range(logical, qL, qU)
+        np.testing.assert_array_equal(results["cpu"]["range"].rows_for(i),
+                                      want, err_msg=f"cpu range q{i}")
+        np.testing.assert_array_equal(results["xla"]["range"].rows_for(i),
+                                      want, err_msg=f"xla range q{i}")
+    for i, c in enumerate(centers):
+        want, _ = brute_force_knn(logical, c, args.k)
+        np.testing.assert_array_equal(results["cpu"]["knn"].neighbors_for(i),
+                                      want, err_msg=f"cpu knn c{i}")
+        np.testing.assert_array_equal(results["xla"]["knn"].neighbors_for(i),
+                                      want, err_msg=f"xla knn c{i}")
+    report["parity"] = "ok"
+    print(f"parity: cpu == xla == oracle on {n_q} windows, "
+          f"{len(centers)} kNN centers ✓")
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

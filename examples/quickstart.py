@@ -1,6 +1,7 @@
 """Quickstart for the `repro.api.Database` facade: learn a monotonic SFC
-with SMBO, build the LMSFC index, run exact window queries, apply LMSFCb
-delta updates, and compare against the fixed-z-order ZM-index.
+with SMBO, build the LMSFC index, run the typed query algebra (COUNT,
+RANGE retrieval, POINT lookup, exact kNN), apply LMSFCb delta updates,
+and compare against the fixed-z-order ZM-index.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,9 +9,10 @@ import time
 
 import numpy as np
 
-from repro.api import Database
+from repro.api import Database, Knn, Point, Range
 from repro.baselines.zm import build_zm_index
-from repro.core.query import brute_force_count, run_workload
+from repro.core.query import (brute_force_count, brute_force_knn,
+                              brute_force_range, run_workload)
 from repro.core.theta import default_K
 from repro.data.synth import make_dataset
 from repro.data.workload import make_workload
@@ -50,6 +52,22 @@ def main():
     print(f"page-access reduction: "
           f"{zstats.pages_accessed/max(1, stats.pages_accessed):.2f}x")
 
+    print("typed query algebra: RANGE retrieval + POINT + exact kNN...")
+    rr = db.query(Range(Ls_te[:20], Us_te[:20]))
+    np.testing.assert_array_equal(
+        rr.rows_for(0), brute_force_range(data, Ls_te[0], Us_te[0]))
+    print(f"Range: {int(rr.counts.sum())} rows over 20 windows, "
+          f"per-query offsets, lexicographic order ✓")
+    pt = db.query(Point(data[:5]))
+    assert pt.found.all()
+    centers = data[:4]
+    nn = db.query(Knn(centers, k=5, metric="l2"))
+    for i, c in enumerate(centers):
+        oracle, _ = brute_force_knn(data, c, 5, "l2")
+        np.testing.assert_array_equal(nn.neighbors_for(i), oracle)
+    print(f"Point: 5/5 found ✓   Knn: k=5 matches the brute-force oracle "
+          f"on {len(centers)} centers ✓")
+
     print("LMSFCb updates: insert 100 rows, tombstone one...")
     rng = np.random.default_rng(7)
     new = np.unique(rng.integers(0, 2**K, size=(100, 2), dtype=np.uint64),
@@ -60,6 +78,8 @@ def main():
     assert res2.exact
     print(f"post-update queries still exact ✓ (epoch={res2.epoch}, "
           f"live rows={db.n})")
+    assert not db.query(Point(data[0])).found[0]   # tombstoned ⇒ gone
+    print("tombstoned row is point-lookup invisible ✓")
 
 
 if __name__ == "__main__":

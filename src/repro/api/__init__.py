@@ -13,17 +13,21 @@ from ..core.curve import (GlobalTheta, MonotonicCurve, PiecewiseCurve,
                           as_curve, curve_from_json)
 from .database import Database
 from .deltas import DeltaStore, get_delta_store
-from .engines import (BaseEngine, StaleServingError, engine_names,
-                      make_engine, register_engine)
+from .engines import (BaseEngine, StaleServingError, engine_capabilities,
+                      engine_names, make_engine, register_engine)
 from .policy import FractionRebuildPolicy, NeverRebuild, RebuildPolicy
-from .result import EngineConfig, QueryResult
+from .queries import Count, Knn, Point, Query, Range
+from .result import (EngineConfig, KnnResult, PointResult, QueryResult,
+                     RangeResult)
 
 __all__ = [
     "Database", "DeltaStore", "get_delta_store",
     "MonotonicCurve", "GlobalTheta", "PiecewiseCurve", "as_curve",
     "curve_from_json",
-    "BaseEngine", "StaleServingError", "engine_names", "make_engine",
-    "register_engine",
+    "BaseEngine", "StaleServingError", "engine_capabilities",
+    "engine_names", "make_engine", "register_engine",
     "FractionRebuildPolicy", "NeverRebuild", "RebuildPolicy",
-    "EngineConfig", "QueryResult",
+    "Query", "Count", "Range", "Point", "Knn",
+    "EngineConfig", "QueryResult", "RangeResult", "PointResult",
+    "KnnResult",
 ]

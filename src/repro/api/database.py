@@ -5,19 +5,25 @@
 
 Quickstart::
 
-    from repro.api import Database, EngineConfig
+    from repro.api import Database, EngineConfig, Count, Range, Point, Knn
 
     db = Database.fit(data, workload=(Ls, Us))          # SMBO θ + build
-    res = db.query(Ls_test, Us_test)                    # CPU engine, exact
+    res = db.query(Ls_test, Us_test)                    # legacy form: COUNT
     db.engine("xla", EngineConfig(max_cand=128))        # attach TPU path
-    res = db.query(Ls_test, Us_test)                    # same counts
+    res = db.query(Count(Ls_test, Us_test))             # same counts
+    rr  = db.query(Range(Ls_test, Us_test))             # the rows themselves
+    pr  = db.query(Point(rows))                         # exact-match lookup
+    nn  = db.query(Knn(centers, k=5, metric="l2"))      # exact kNN
     db.insert([x, y]); db.delete(old_row)               # LMSFCb deltas
     res = db.query(Ls_test, Us_test)                    # auto-refresh, exact
 
-Every engine is **exact by construction**: queries whose candidate-page
-set overflows `max_cand` are automatically escalated (retried with a
-doubled bound, with a final CPU fallback), so `QueryResult.counts` can be
-trusted regardless of the engine or its tuning.
+`query` dispatches on the typed algebra (`repro.api.queries`); a plain
+``(Ls, Us)`` still means COUNT.  Engines declare the kinds they execute
+natively (`capabilities`), and the planner routes the rest to the CPU
+engine.  Every engine is **exact by construction**: queries whose
+candidate-page set (or, for retrieval, row-id buffer) overflows its bound
+are automatically escalated (retried doubled, with a final CPU fallback),
+so results can be trusted regardless of the engine or its tuning.
 """
 from __future__ import annotations
 
@@ -25,12 +31,15 @@ import numpy as np
 
 from ..core.curve import MonotonicCurve, as_curve, default_curve
 from ..core.index import IndexConfig, LMSFCIndex
-from ..core.query import QueryStats, query_count
+from ..core.query import (QueryStats, knn_box, knn_select, lex_sorted_rows,
+                          query_count, query_knn, query_point, query_range)
 from ..core.theta import Theta, default_K
 from .deltas import DeltaStore, get_delta_store
-from .engines import make_engine
+from .engines import engine_capabilities, make_engine
 from .policy import FractionRebuildPolicy, RebuildPolicy
-from .result import EngineConfig, QueryResult
+from .queries import Count, Knn, Point, Query, Range, norm_rects
+from .result import (EngineConfig, KnnResult, PointResult, QueryResult,
+                     RangeResult)
 
 _FAMILIES = ("global", "piecewise")
 
@@ -70,18 +79,23 @@ def _resolve_curve_arg(curve, theta):
     return as_curve(curve), "global"
 
 
-def _norm_rects(rects, U=None):
-    """Accept (Ls, Us) pairs, a (Q, d, 2) rect array, or a single (qL, qU)."""
-    if U is not None:
-        Ls, Us = rects, U
-    elif isinstance(rects, tuple) and len(rects) == 2:
-        Ls, Us = rects
-    else:
-        r = np.asarray(rects, dtype=np.uint64)
-        Ls, Us = r[..., 0], r[..., 1]
-    Ls = np.atleast_2d(np.asarray(Ls, dtype=np.uint64))
-    Us = np.atleast_2d(np.asarray(Us, dtype=np.uint64))
-    return Ls, Us
+# (Ls, Us) normalization + validation lives with the algebra now
+_norm_rects = norm_rects
+
+
+def _concat_rows(parts, d, dist_parts=None):
+    """Per-query row lists -> (rows, offsets[, dists]) with empty-safe
+    concatenation (the result assembly shared by Range and Knn)."""
+    offsets = np.zeros(len(parts) + 1, dtype=np.int64)
+    np.cumsum([len(p) for p in parts], out=offsets[1:])
+    rows = (np.concatenate(parts) if offsets[-1]
+            else np.empty((0, d), dtype=np.uint64))
+    if dist_parts is None:
+        return rows, offsets
+    dists = (np.concatenate([np.asarray(v, dtype=np.float64)
+                             for v in dist_parts]) if offsets[-1]
+             else np.empty(0, dtype=np.float64))
+    return rows, offsets, dists
 
 
 class Database:
@@ -175,16 +189,53 @@ class Database:
         return name, self._engines[name]
 
     # ------------------------------------------------------------------
-    # query (exact by construction on every engine)
+    # query (typed algebra; exact by construction on every engine)
     # ------------------------------------------------------------------
-    def query(self, rects, U=None, *, engine: str = None) -> QueryResult:
-        """COUNT(*) for a batch of window queries.
+    def plan(self, kind: str, engine: str = None) -> str:
+        """The query planner: resolve which engine serves a query kind.
 
-        `rects` is ``(Ls, Us)``, a ``(Q, d, 2)`` uint64 array, or a single
-        ``(qL, qU)``; `engine` overrides the active engine for this call.
+        The requested (or active) engine serves kinds it declares in its
+        `capabilities`; anything else routes to the CPU engine, so every
+        query type is answerable — exactly — whatever engine is active.
         """
-        Ls, Us = _norm_rects(rects, U)
-        name, eng = self._get_engine(engine)
+        requested = engine or self._active or "cpu"
+        eng = self._engines.get(requested)
+        caps = (eng.capabilities if eng is not None
+                else engine_capabilities().get(requested))
+        if caps is None:
+            return requested       # unknown name: let _get_engine raise
+        return requested if kind in caps else "cpu"
+
+    def query(self, q, U=None, *, engine: str = None):
+        """Run one query of the typed algebra (`repro.api.queries`).
+
+        `q` is a `Count`, `Range`, `Point`, or `Knn` value — or, for
+        backward compatibility, plain ``(Ls, Us)`` / rect-array bounds,
+        which mean COUNT (``db.query(Ls, Us)`` ≡ ``db.query(Count(Ls,
+        Us))``).  `engine` overrides the active engine for this call; kinds
+        the engine does not support natively are routed to the CPU engine
+        by the planner.  Returns the kind's result type (`QueryResult`,
+        `RangeResult`, `PointResult`, `KnnResult`).
+        """
+        if not isinstance(q, Query):
+            q = Count(q, U)
+        elif U is not None:
+            raise ValueError("U= applies only to the legacy (Ls, Us) COUNT "
+                             "form, not to typed queries")
+        name, eng = self._get_engine(self.plan(q.kind, engine))
+        if q.kind == "count":
+            return self._query_count(q, name, eng)
+        if q.kind == "range":
+            return self._query_range(q, name, eng)
+        if q.kind == "point":
+            return self._query_point(q, name, eng)
+        return self._query_knn(q, name, eng)
+
+    # -- COUNT -----------------------------------------------------------
+    def _count_exact(self, Ls, Us, eng, *, force_exact: bool = False):
+        """Counts + overflow escalation (doubled max_cand, CPU fallback).
+        `force_exact` applies the CPU fallback even when the engine config
+        disabled it (Point/Knn promise exactness unconditionally)."""
         eng.sync(eng.cfg.on_stale)
         counts, over, stats = eng.run(Ls, Us)
         first_over = over.copy()
@@ -202,18 +253,140 @@ class Database:
                 over = np.zeros_like(over)
                 over[idx] = o2
                 rounds += 1
-        if over.any() and eng.cfg.cpu_fallback:
+        if over.any() and (eng.cfg.cpu_fallback or force_exact):
             counts = counts.copy()
             for i in np.nonzero(over)[0]:
                 counts[i] = query_count(self.index, Ls[i], Us[i]).result
                 fallbacks += 1
             over = np.zeros_like(over)
+        return counts, first_over, over, rounds, fallbacks, stats
+
+    def _query_count(self, q: Count, name, eng) -> QueryResult:
+        Ls, Us = q.normalized(d=self.d)
+        counts, first_over, over, rounds, fallbacks, stats = \
+            self._count_exact(Ls, Us, eng)
         if stats is None:
             stats = QueryStats(result=int(counts.sum()), subqueries=len(Ls))
         return QueryResult(counts=counts, engine=name, epoch=self.store.epoch,
                            stats=stats, overflowed=first_over,
                            residual_overflow=over, escalations=rounds,
                            cpu_fallbacks=fallbacks)
+
+    # -- RANGE retrieval -------------------------------------------------
+    def _range_exact(self, Ls, Us, eng, *, force_exact: bool = False):
+        """Row retrieval + two-dimensional overflow escalation: candidate
+        pages (max_cand) and the row-id buffer (max_hits) are doubled
+        independently until exact, with the CPU walk as the final net."""
+        eng.sync(eng.cfg.on_stale)
+        rows_list, co, ho, stats = eng.run_range(Ls, Us)
+        first_over = (co + ho).astype(np.int32)
+        over = ((co > 0) | (ho > 0)).astype(np.int32)
+        rounds = 0
+        fallbacks = 0
+        if over.any() and eng.cfg.escalate:
+            max_cand = eng.cfg.max_cand
+            max_hits = eng.cfg.max_hits
+            cb = eng.overflow_free_cand
+            hb = eng.overflow_free_hits
+            while over.any() and (max_cand < cb or max_hits < hb):
+                if co.any():
+                    max_cand = min(2 * max_cand, cb)
+                if ho.any():
+                    max_hits = min(2 * max_hits, hb)
+                idx = np.nonzero(over)[0]
+                rl2, co2, ho2, _ = eng.run_range(
+                    Ls[idx], Us[idx], max_cand=max_cand, max_hits=max_hits)
+                for j, i in enumerate(idx):
+                    rows_list[i] = rl2[j]
+                co = np.zeros_like(co)
+                ho = np.zeros_like(ho)
+                co[idx] = co2
+                ho[idx] = ho2
+                over = ((co > 0) | (ho > 0)).astype(np.int32)
+                rounds += 1
+        if over.any() and (eng.cfg.cpu_fallback or force_exact):
+            for i in np.nonzero(over)[0]:
+                rows_list[i] = query_range(self.index, Ls[i], Us[i])[0]
+                fallbacks += 1
+            over = np.zeros_like(over)
+        return rows_list, first_over, over, rounds, fallbacks, stats
+
+    def _query_range(self, q: Range, name, eng) -> RangeResult:
+        Ls, Us = q.normalized(d=self.d)
+        rows_list, first_over, over, rounds, fallbacks, stats = \
+            self._range_exact(Ls, Us, eng)
+        rows_list = [lex_sorted_rows(r) for r in rows_list]  # canonical order
+        rows, offsets = _concat_rows(rows_list, self.d)
+        if stats is None:
+            stats = QueryStats(result=int(offsets[-1]), subqueries=len(Ls))
+        return RangeResult(rows=rows, offsets=offsets, engine=name,
+                           epoch=self.store.epoch, stats=stats,
+                           overflowed=first_over, residual_overflow=over,
+                           escalations=rounds, cpu_fallbacks=fallbacks)
+
+    # -- POINT lookup ----------------------------------------------------
+    def _query_point(self, q: Point, name, eng) -> PointResult:
+        xs = q.normalized(d=self.d)
+        if name == "cpu":
+            found = query_point(self.index, xs)
+            return PointResult(found=found, engine=name,
+                               epoch=self.store.epoch)
+        # device engines: a point is a degenerate one-cell window; counts
+        # are exact by construction, so found == (count > 0)
+        counts, _, _, rounds, fallbacks, stats = \
+            self._count_exact(xs, xs, eng, force_exact=True)
+        return PointResult(found=counts > 0, engine=name,
+                           epoch=self.store.epoch, stats=stats,
+                           escalations=rounds, cpu_fallbacks=fallbacks)
+
+    # -- kNN -------------------------------------------------------------
+    def _query_knn(self, q: Knn, name, eng) -> KnnResult:
+        """Exact kNN: seed an upper-bound radius from expanding page rings
+        around each center's curve address, retrieve the covering box
+        exactly through the engine's native range path, refine with exact
+        integer distances (deterministic tie-break)."""
+        centers = q.normalized(d=self.d)
+        k, metric = int(q.k), q.metric
+        epoch = self.store.epoch
+        if name == "cpu":
+            stats = QueryStats()
+            parts, dist_parts = [], []
+            for c in centers:
+                rows, dd, st = query_knn(self.index, c, k, metric)
+                parts.append(rows)
+                dist_parts.append(dd)
+                stats.merge(st)
+            rows, offsets, dd = _concat_rows(parts, self.d, dist_parts)
+            return KnnResult(neighbors=rows, offsets=offsets, dists=dd,
+                             k=k, metric=metric, engine=name, epoch=epoch,
+                             stats=stats)
+        from ..core.serve import knn_seed_radius   # lazy: imports jax
+        eng.sync(eng.cfg.on_stale)
+        radius = knn_seed_radius(eng._host, self.index.curve, centers, k,
+                                 metric)
+        total = int(np.asarray(eng._host.page_size).sum())
+        kk = min(k, total)
+        if kk <= 0:
+            rows, offsets, dd = _concat_rows([[]] * len(centers), self.d,
+                                             [[]] * len(centers))
+            return KnnResult(neighbors=rows, offsets=offsets, dists=dd,
+                             k=k, metric=metric, engine=name, epoch=epoch)
+        Ls = np.empty_like(centers)
+        Us = np.empty_like(centers)
+        for i, (c, r) in enumerate(zip(centers, radius)):
+            Ls[i], Us[i] = knn_box(c, r, self.index.K)
+        rows_list, _, _, rounds, fallbacks, stats = \
+            self._range_exact(Ls, Us, eng, force_exact=True)
+        parts, dist_parts = [], []
+        for c, rows in zip(centers, rows_list):
+            sel, dd = knn_select(rows, c, kk, metric)
+            parts.append(sel)
+            dist_parts.append(dd)
+        rows, offsets, dd = _concat_rows(parts, self.d, dist_parts)
+        return KnnResult(neighbors=rows, offsets=offsets, dists=dd, k=k,
+                         metric=metric, engine=name, epoch=epoch,
+                         stats=stats, escalations=rounds,
+                         cpu_fallbacks=fallbacks)
 
     # ------------------------------------------------------------------
     # updates (LMSFCb deltas + LMSFCa rebuild)
@@ -232,15 +405,15 @@ class Database:
         self._after_mutation()
         return int(pages[-1]) if len(pages) else -1
 
-    def delete(self, x) -> None:
-        """Tombstone one row (or an iterable of rows)."""
+    def delete(self, x) -> int:
+        """Tombstone one row (or an iterable of rows, batch-encoded);
+        returns how many rows were actually tombstoned."""
         x = np.asarray(x, dtype=np.uint64)
         if x.ndim == 1:
             x = x[None]
-        store = self.store
-        for row in x:
-            store.delete(row)
+        n = self.store.delete_many(x)
         self._after_mutation()
+        return n
 
     def _after_mutation(self) -> None:
         if self.policy.should_rebuild(self.index, self.store):

@@ -88,23 +88,43 @@ class DeltaStore:
     def delete(self, x) -> None:
         """Tombstone x (base or delta row); rows not present in the index
         are a true no-op so live-row accounting stays correct."""
+        self.delete_many(np.asarray(x, dtype=np.uint64)[None])
+
+    def delete_many(self, xs) -> int:
+        """Bulk tombstone: one batched encode + forward-index lookup +
+        vectorized row-set membership for all rows (already-tombstoned and
+        absent rows are no-ops, duplicates within the batch collapse), one
+        epoch bump for the whole batch.  Returns how many rows were
+        actually tombstoned."""
         index = self.index
-        x = np.asarray(x, dtype=np.uint64)
-        key = tuple(int(v) for v in x)
-        if key in self.tombstones:
-            return
-        z = index.curve.encode_np(x[None])[0]
-        p = int(index.page_of(z)[0])
-        exists = bool(rows_in_set(x[None], index.xs)[0])
-        if not exists and self.deltas.get(p):
-            exists = bool(rows_in_set(x[None], self.delta_rows(p))[0])
-        if not exists:
-            return
-        self.tombstones.add(key)
-        self.n_deleted += 1
-        self._tomb_cache = None
+        xs = np.asarray(xs, dtype=np.uint64)
+        if len(xs) == 0:
+            return 0
+        xs = np.unique(xs, axis=0)
+        if self.tombstones:
+            xs = xs[~rows_in_set(xs, self.tombstone_rows())]
+        if len(xs) == 0:
+            return 0
+        z = index.curve.encode_np(xs)
+        ps = np.asarray(index.page_of(z), dtype=np.int64)
+        exists = rows_in_set(xs, index.xs)
+        missing = ~exists
+        if missing.any() and self.deltas:
+            for p in np.unique(ps[missing]):
+                if self.deltas.get(int(p)):
+                    sel = missing & (ps == p)
+                    exists[sel] = rows_in_set(xs[sel],
+                                              self.delta_rows(int(p)))
+        if not exists.any():
+            return 0
         self.epoch += 1
-        self._page_epoch[p] = self.epoch
+        for x, p in zip(xs[exists], ps[exists]):
+            self.tombstones.add(tuple(int(v) for v in x))
+            self._page_epoch[int(p)] = self.epoch
+        n = int(exists.sum())
+        self.n_deleted += n
+        self._tomb_cache = None
+        return n
 
     # -- staleness ---------------------------------------------------------
     def dirty_since(self, epoch: int) -> list:

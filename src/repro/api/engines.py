@@ -1,9 +1,16 @@
 """Execution engines behind `Database.query`, unified under one registry.
 
-Every engine consumes uint64 query rectangles and produces
-``(counts, overflow, stats)`` in host numpy; `Database` layers the
-exactness policy (overflow escalation + CPU fallback) and staleness
-policy (DeltaStore epoch vs the engine's packed arrays) on top.
+Every engine consumes uint64 query rectangles and produces host-numpy
+results (`run` for COUNT, `run_range` for retrieval); `Database` layers
+the exactness policy (overflow escalation + CPU fallback), the staleness
+policy (DeltaStore epoch vs the engine's packed arrays), and the query
+planner on top.
+
+Each engine class declares which query kinds of the algebra
+(`repro.api.queries`) it executes natively via `capabilities`, recorded in
+the registry at registration time (`engine_capabilities()`); the Database
+planner routes a query whose kind an engine lacks to the CPU engine, so
+every query type is answerable — exactly — on every configured engine.
 
   cpu          — the faithful per-query engine (core/query.py); always
                  reads the live index + DeltaStore, never stale, never
@@ -24,13 +31,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.query import QueryStats, query_count
+from ..core.query import QueryStats, query_count, query_range
 from ..core.serve import (make_distributed_query_fn, make_query_fn,
-                          pack_serving_arrays, shard_serving_arrays)
+                          make_range_fn, pack_serving_arrays,
+                          shard_serving_arrays)
 from ..core.zorder64 import u64_to_z64
 from .result import EngineConfig
 
 _ENGINES = {}
+_CAPABILITIES = {}
 
 
 class StaleServingError(RuntimeError):
@@ -41,6 +50,7 @@ class StaleServingError(RuntimeError):
 def register_engine(name: str):
     def deco(cls):
         _ENGINES[name] = cls
+        _CAPABILITIES[name] = frozenset(cls.capabilities)
         cls.name = name
         return cls
     return deco
@@ -50,6 +60,12 @@ def engine_names() -> list:
     return sorted(_ENGINES)
 
 
+def engine_capabilities() -> dict:
+    """name -> frozenset of natively executed query kinds ('count',
+    'range', 'point', 'knn'); the planner's routing table."""
+    return dict(_CAPABILITIES)
+
+
 def make_engine(name: str, db, config: EngineConfig = None):
     if name not in _ENGINES:
         raise KeyError(f"unknown engine {name!r}; registered: {engine_names()}")
@@ -57,9 +73,14 @@ def make_engine(name: str, db, config: EngineConfig = None):
 
 
 class BaseEngine:
-    """Interface: run a uint64 rect batch, report staleness, invalidate."""
+    """Interface: run a uint64 rect batch, report staleness, invalidate.
+
+    `capabilities` names the query kinds the engine executes natively;
+    anything else is routed to the CPU engine by the Database planner.
+    """
 
     name = "?"
+    capabilities = frozenset({"count"})
 
     def __init__(self, db, cfg: EngineConfig):
         self.db = db
@@ -78,14 +99,26 @@ class BaseEngine:
         """A max_cand at/above which candidate overflow cannot occur."""
         return 0
 
+    @property
+    def overflow_free_hits(self) -> int:
+        """A max_hits at/above which hit-buffer overflow cannot occur."""
+        return 0
+
     def run(self, Ls, Us, max_cand: int = None):
         """(Q, d) uint64 bounds -> (counts int64, overflow int32, stats)."""
+        raise NotImplementedError
+
+    def run_range(self, Ls, Us, max_cand: int = None, max_hits: int = None):
+        """(Q, d) uint64 bounds -> (rows_list — one (m_i, d) uint64 array
+        per query, engine order — cand_over int32, hit_over int32, stats)."""
         raise NotImplementedError
 
 
 @register_engine("cpu")
 class CpuEngine(BaseEngine):
     """Per-query CPU engine; exact by construction, delta-aware, stat-rich."""
+
+    capabilities = frozenset({"count", "range", "point", "knn"})
 
     def run(self, Ls, Us, max_cand=None):
         stats = QueryStats()
@@ -95,6 +128,16 @@ class CpuEngine(BaseEngine):
             counts[i] = st.result
             stats.merge(st)
         return counts, np.zeros(len(Ls), dtype=np.int32), stats
+
+    def run_range(self, Ls, Us, max_cand=None, max_hits=None):
+        stats = QueryStats()
+        rows_list = []
+        for qL, qU in zip(Ls, Us):
+            rows, st = query_range(self.db.index, qL, qU)
+            rows_list.append(rows)
+            stats.merge(st)
+        zeros = np.zeros(len(Ls), dtype=np.int32)
+        return rows_list, zeros, zeros.copy(), stats
 
 
 class _DeviceEngine(BaseEngine):
@@ -106,7 +149,8 @@ class _DeviceEngine(BaseEngine):
         super().__init__(db, cfg)
         self._host = None        # numpy ServingArrays (pack source of truth)
         self._arrays = None      # device ServingArrays
-        self._qfns = {}          # max_cand -> compiled query fn
+        self._qfns = {}          # max_cand -> compiled count fn
+        self._rfns = {}          # (max_cand, max_hits) -> compiled range fn
         self.built_epoch = -1
 
     # -- config ------------------------------------------------------------
@@ -123,6 +167,7 @@ class _DeviceEngine(BaseEngine):
         self._host = None
         self._arrays = None
         self._qfns.clear()
+        self._rfns.clear()
         self.built_epoch = -1
 
     def sync(self, on_stale: str = "refresh"):
@@ -173,6 +218,7 @@ class _DeviceEngine(BaseEngine):
             self._host = pack_serving_arrays(
                 index, pad_pages_to=self.pad_pages_to, cap=grown)
             self._qfns.clear()          # cap is a static shape
+            self._rfns.clear()
             dirty = store.dirty_since(0)
             live = {p: store.live_page_rows(p) for p in dirty}
         h = self._host
@@ -199,20 +245,35 @@ class _DeviceEngine(BaseEngine):
             self.sync()
         return int(self._host.page_size.shape[0])
 
+    @property
+    def overflow_free_hits(self) -> int:
+        if self._host is None:
+            self.sync()
+        return max(1, int(self._host.page_size.sum()))
+
     def _qfn(self, max_cand: int):
         raise NotImplementedError
 
-    def run(self, Ls, Us, max_cand=None):
+    def _rfn(self, max_cand: int, max_hits: int):
+        raise NotImplementedError
+
+    def _device_queries(self, Ls, Us):
+        """Pack a uint64 rect batch as a padded (Qp, d, 2) int32 device
+        array (queries padded to q_chunk by repeating the last)."""
         import jax.numpy as jnp
-        if self._arrays is None:
-            self.sync()
         Q = len(Ls)
         qc = self.cfg.q_chunk
         Qp = -(-Q // qc) * qc
         rect = np.stack([Ls, Us], axis=-1).astype(np.uint32)   # (Q, d, 2)
         if Qp != Q:
             rect = np.concatenate([rect, np.repeat(rect[-1:], Qp - Q, axis=0)])
-        q = jnp.asarray(rect.view(np.int32))
+        return jnp.asarray(rect.view(np.int32))
+
+    def run(self, Ls, Us, max_cand=None):
+        if self._arrays is None:
+            self.sync()
+        Q = len(Ls)
+        q = self._device_queries(Ls, Us)
         fn = self._qfns.get(max_cand or self.cfg.max_cand)
         if fn is None:
             fn = self._qfn(max_cand or self.cfg.max_cand)
@@ -221,18 +282,62 @@ class _DeviceEngine(BaseEngine):
         return (np.asarray(counts)[:Q].astype(np.int64),
                 np.asarray(over)[:Q].astype(np.int32), None)
 
+    def run_range(self, Ls, Us, max_cand=None, max_hits=None):
+        if self._arrays is None:
+            self.sync()
+        P_pad, _, slot_cap = self._host.points.shape
+        if P_pad * slot_cap >= 2**31:
+            # gid = page*cap + slot must fit int32; wrapping would drop
+            # rows silently while still reporting exact
+            raise ValueError(
+                f"range retrieval needs pages*cap < 2^31 for int32 row "
+                f"ids; got {P_pad} pages x cap {slot_cap}")
+        Q = len(Ls)
+        q = self._device_queries(Ls, Us)
+        key = (max_cand or self.cfg.max_cand, max_hits or self.cfg.max_hits)
+        fn = self._rfns.get(key)
+        if fn is None:
+            fn = self._rfn(*key)
+            self._rfns[key] = fn
+        ids, n_hits, co, ho = fn(self._arrays, q)
+        ids = np.asarray(ids)[:Q]
+        co = np.asarray(co)[:Q].astype(np.int32)
+        ho = np.asarray(ho)[:Q].astype(np.int32)
+        # resolve global row ids (page * cap + slot) against the host copy
+        pts_u32 = np.ascontiguousarray(self._host.points).view(np.uint32)
+        cap = pts_u32.shape[2]
+        rows_list = []
+        for i in range(Q):
+            gid = ids[i][ids[i] >= 0].astype(np.int64)
+            rows_list.append(
+                pts_u32[gid // cap, :, gid % cap].astype(np.uint64))
+        return rows_list, co, ho, None
+
 
 @register_engine("xla")
 class XlaEngine(_DeviceEngine):
-    """Single-shard batched engine, XLA window filter."""
+    """Single-shard batched engine, XLA window filter.
+
+    Natively counts, retrieves (the id-emitting range pipeline), and —
+    through the ring-seeded range refinement orchestrated by `Database`
+    over this engine's packed arrays — serves point and kNN queries.
+    """
 
     default_backend = "xla"
+    capabilities = frozenset({"count", "range", "point", "knn"})
 
     def _qfn(self, max_cand):
         import jax
         return jax.jit(make_query_fn(
             self.db.index.curve, k_maxsplit=self.cfg.k_maxsplit,
             max_cand=max_cand, q_chunk=self.cfg.q_chunk,
+            backend=self.backend, interpret=self.cfg.interpret))
+
+    def _rfn(self, max_cand, max_hits):
+        import jax
+        return jax.jit(make_range_fn(
+            self.db.index.curve, k_maxsplit=self.cfg.k_maxsplit,
+            max_cand=max_cand, max_hits=max_hits, q_chunk=self.cfg.q_chunk,
             backend=self.backend, interpret=self.cfg.interpret))
 
 
@@ -245,9 +350,15 @@ class PallasEngine(XlaEngine):
 
 @register_engine("distributed")
 class DistributedEngine(_DeviceEngine):
-    """Page-sharded shard_map engine; counts/overflow psum-reduced."""
+    """Page-sharded shard_map engine; counts/overflow psum-reduced.
+
+    Point queries lower to degenerate one-cell counts (psum-exact); range
+    retrieval and kNN are not sharded yet — the planner serves them via
+    the CPU engine.
+    """
 
     default_backend = "xla"
+    capabilities = frozenset({"count", "point"})
 
     def __init__(self, db, cfg):
         super().__init__(db, cfg)

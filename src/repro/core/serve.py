@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any
 
 import jax
@@ -37,11 +38,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..dist.compat import shard_map
-from ..kernels.window_filter.ops import window_filter
+from ..kernels.window_filter.ops import window_filter, window_match
 from .curve import as_curve
 from .index import LMSFCIndex
 from .split import recursive_split_jax, zranges_jax
-from .zorder64 import u64_to_z64, z64_le
+from .zorder64 import u64_to_z64, z64_le, z64_to_u64
 
 # ---------------------------------------------------------------------------
 # serving arrays
@@ -201,6 +202,173 @@ def make_query_fn(curve, *, k_maxsplit: int = 4, max_cand: int = 64,
         return counts.reshape(Q), over.reshape(Q).astype(jnp.int32)
 
     return query_batch
+
+
+# ---------------------------------------------------------------------------
+# range retrieval: gather matching row ids into a static output buffer
+# ---------------------------------------------------------------------------
+
+
+def make_range_fn(curve, *, k_maxsplit: int = 4, max_cand: int = 64,
+                  max_hits: int = 1024, q_chunk: int = 16,
+                  backend: str = "xla", interpret: bool = False):
+    """The retrieval twin of `make_query_fn`: instead of reducing to a
+    count, matching rows are compacted device-side into a static per-query
+    id buffer (global row id = page * cap + slot, so the host resolves rows
+    from its packed copy with one gather).
+
+    Returns query_batch(arrays, queries (Q, d, 2) int32) ->
+      ids      (Q, max_hits) int32 — matching global row ids, -1 padded
+      n_hits   (Q,) int32 — total matches within the candidate-page set
+      cand_over (Q,) int32 — candidate pages overflowed max_cand
+      hit_over  (Q,) int32 — matches overflowed max_hits (ids truncated)
+
+    Unlike the count path there is no containment shortcut: contained
+    pages' rows must be emitted too, so every live page is a candidate.
+    Exact iff both overflow flags are 0 (the Database planner escalates
+    the rest).  Assumes pages*cap < 2^31 (ids are int32).
+    """
+    curve = as_curve(curve)
+
+    def _chunk(arrays: ServingArrays, queries):
+        Qc = queries.shape[0]
+        rects, valid = recursive_split_jax(
+            queries.astype(jnp.uint32), curve, k_maxsplit)
+        zlo, zhi = zranges_jax(rects, curve)          # (Qc, S, 2)
+        pz_min = arrays.page_zmin                     # (P, 2)
+        pz_max = arrays.page_zmax
+        ov = (z64_le(zlo[:, :, None, :], pz_max[None, None]) &
+              z64_le(pz_min[None, None], zhi[:, :, None, :]))  # (Qc, S, P)
+        ov = jnp.any(ov & valid[:, :, None], axis=1)  # (Qc, P)
+        qlo = queries[:, None, :, 0]                  # (Qc, 1, d)
+        qhi = queries[:, None, :, 1]
+        mlo = arrays.page_mbr[None, :, :, 0]          # (1, P, d)
+        mhi = arrays.page_mbr[None, :, :, 1]
+        intersect = jnp.all(_u32_le(mlo, qhi) & _u32_le(qlo, mhi), -1)
+        live = ov & intersect                         # (Qc, P)
+        # ---- compact: top-C candidate pages ------------------------------
+        Pn = live.shape[1]
+        pos = jnp.cumsum(live, axis=1) - 1            # (Qc, P)
+        n_cand = pos[:, -1] + 1
+        cand_over = n_cand > max_cand
+        cand = jnp.zeros((Qc, max_cand), jnp.int32)
+        qidx = jnp.broadcast_to(jnp.arange(Qc)[:, None], live.shape)
+        pidx = jnp.broadcast_to(jnp.arange(Pn)[None, :], live.shape)
+        okpos = live & (pos < max_cand)
+        cand = cand.at[jnp.where(okpos, qidx, Qc), jnp.where(okpos, pos, 0)
+                       ].set(pidx, mode="drop")
+        cand_valid = (jnp.arange(max_cand)[None, :]
+                      < jnp.minimum(n_cand, max_cand)[:, None])
+        # ---- gather + match (index-emitting window filter) ---------------
+        pts = arrays.points[cand]                     # (Qc, C, d, cap)
+        size = jnp.where(cand_valid, arrays.page_size[cand], 0)
+        d = pts.shape[2]
+        cap = pts.shape[3]
+        rect = jnp.broadcast_to(queries[:, None], (Qc, max_cand, d, 2))
+        mask = window_match(pts.reshape(-1, d, cap), rect.reshape(-1, d, 2),
+                            size.reshape(-1), backend=backend,
+                            interpret=interpret)      # (Qc*C, cap) bool
+        mask = mask.reshape(Qc, max_cand * cap)
+        gid = (cand[:, :, None] * cap
+               + jnp.arange(cap, dtype=jnp.int32)[None, None, :])
+        gid = gid.reshape(Qc, max_cand * cap)
+        # ---- compact matches into the static id buffer -------------------
+        hpos = jnp.cumsum(mask, axis=1) - 1           # (Qc, C*cap)
+        n_hits = (hpos[:, -1] + 1).astype(jnp.int32)
+        hit_over = n_hits > max_hits
+        out = jnp.full((Qc, max_hits), -1, jnp.int32)
+        hq = jnp.broadcast_to(jnp.arange(Qc)[:, None], mask.shape)
+        okh = mask & (hpos < max_hits)
+        out = out.at[jnp.where(okh, hq, Qc), jnp.where(okh, hpos, 0)
+                     ].set(gid, mode="drop")
+        return (out, n_hits, cand_over.astype(jnp.int32),
+                hit_over.astype(jnp.int32))
+
+    def query_batch(arrays: ServingArrays, queries):
+        Q = queries.shape[0]
+        assert Q % q_chunk == 0
+        qs = queries.reshape(Q // q_chunk, q_chunk, *queries.shape[1:])
+        ids, n_hits, co, ho = jax.lax.map(
+            functools.partial(_chunk, arrays), qs)
+        return (ids.reshape(Q, -1), n_hits.reshape(Q),
+                co.reshape(Q), ho.reshape(Q))
+
+    return query_batch
+
+
+# ---------------------------------------------------------------------------
+# kNN seeding: page-ring expansion around each center's curve address,
+# vectorized over centers (host-side, over the packed serving arrays)
+# ---------------------------------------------------------------------------
+
+
+def knn_seed_radius(host: ServingArrays, curve, centers: np.ndarray,
+                    k: int, metric: str = "l2") -> list:
+    """Upper-bound each center's k-th-NN distance by expanding page rings
+    around its curve address over the *packed* (host numpy) serving arrays
+    — the same live row set the device filters, so the bound holds after
+    delta refreshes.
+
+    Ring r covers pages [p0 - r, p0 + r]; r doubles until a ring holds at
+    least min(k, total_live) live rows (or the whole index).  The exact
+    k-th candidate distance then bounds the true k-th-NN distance, and the
+    returned per-center box half-width is inflated past any float64
+    rounding, so the box [c - r, c + r] provably contains the k nearest.
+    Vectorized over all still-active centers per ring round.
+    """
+    centers = np.atleast_2d(np.asarray(centers, dtype=np.uint64))
+    pts_u32 = np.ascontiguousarray(host.points).view(np.uint32)  # (P, d, cap)
+    Pn, d, cap = pts_u32.shape
+    sizes = np.asarray(host.page_size, dtype=np.int64)
+    csum = np.concatenate([[0], np.cumsum(sizes)])
+    kk = min(int(k), int(csum[-1]))
+    Q = len(centers)
+    if kk <= 0:
+        return [0] * Q
+    zmin_u64 = z64_to_u64(np.asarray(host.page_zmin))  # padded pages: +inf
+    zc = curve.encode_np(centers)
+    p0 = np.clip(np.searchsorted(zmin_u64, zc, side="right") - 1, 0, Pn - 1)
+    radius = [0] * Q
+    active = np.ones(Q, dtype=bool)
+    w = 1
+    slot = np.arange(cap)
+    while active.any():
+        idxs = np.nonzero(active)[0]
+        lo = np.maximum(p0[idxs] - w, 0)
+        hi = np.minimum(p0[idxs] + w, Pn - 1)
+        ready = ((csum[hi + 1] - csum[lo] >= kk)
+                 | ((lo == 0) & (hi == Pn - 1)))
+        ridx = idxs[ready]
+        if len(ridx):
+            offs = np.arange(-w, w + 1)
+            pg = p0[ridx, None] + offs[None, :]       # (R, W)
+            okp = (pg >= 0) & (pg < Pn)
+            pgc = np.clip(pg, 0, Pn - 1)
+            blk = pts_u32[pgc]                        # (R, W, d, cap)
+            bsz = np.where(okp, sizes[pgc], 0)
+            valid = slot[None, None, :] < bsz[:, :, None]   # (R, W, cap)
+            R = len(ridx)
+            if metric == "linf":
+                diff = np.abs(blk.astype(np.int64)
+                              - centers[ridx].astype(np.int64)[:, None, :, None])
+                dist = np.where(valid, diff.max(axis=2),
+                                np.iinfo(np.int64).max)
+                kth = np.partition(dist.reshape(R, -1), kk - 1)[:, kk - 1]
+                for i, v in zip(ridx, kth):           # L∞: exact, no slop
+                    radius[i] = int(v)
+            else:
+                c = centers[ridx].astype(np.float64)[:, None, :, None]
+                diff = blk.astype(np.float64) - c
+                d2 = np.where(valid, np.sum(diff * diff, axis=2), np.inf)
+                kth = np.partition(d2.reshape(R, -1), kk - 1)[:, kk - 1]
+                for i, v in zip(ridx, kth):
+                    # float64 may round the exact integer d2 either way;
+                    # inflate so the half-width stays an upper bound
+                    safe = float(v) * (1 + 1e-9) + 1.0
+                    radius[i] = int(math.ceil(math.sqrt(safe))) + 1
+            active[ridx] = False
+        w *= 2
+    return radius
 
 
 # ---------------------------------------------------------------------------

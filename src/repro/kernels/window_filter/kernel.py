@@ -33,6 +33,41 @@ def _filter_kernel(pts_ref, rect_ref, size_ref, out_ref):
     out_ref[:, 0] = jnp.sum(jnp.where(ok & valid, 1, 0), axis=-1)
 
 
+def _match_kernel(pts_ref, rect_ref, size_ref, out_ref):
+    """Index-emitting variant: the (bg, cap) membership mask itself, for
+    engines that compact matching slots into row-id buffers (range
+    retrieval) instead of reducing to a count."""
+    pts = pts_ref[...]          # (bg, d, cap)
+    lo = rect_ref[:, :, 0:1]
+    hi = rect_ref[:, :, 1:2]
+    inside = ((lo ^ _SIGN) <= (pts ^ _SIGN)) & ((pts ^ _SIGN) <= (hi ^ _SIGN))
+    ok = jnp.all(inside, axis=1)                      # (bg, cap)
+    pos = jax.lax.broadcasted_iota(jnp.int32, ok.shape, 1)
+    valid = pos < size_ref[:, 0:1]
+    out_ref[...] = jnp.where(ok & valid, 1, 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "interpret"))
+def window_match_pallas(pts, rect, size, block_g: int = 8,
+                        interpret: bool = False):
+    """pts: (G, d, cap) int32; rect: (G, d, 2) int32; size: (G,) int32
+    -> (G, cap) int32 0/1 membership.  G % block_g == 0 (caller pads)."""
+    G, d, cap = pts.shape
+    assert G % block_g == 0
+    return pl.pallas_call(
+        _match_kernel,
+        grid=(G // block_g,),
+        in_specs=[
+            pl.BlockSpec((block_g, d, cap), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_g, d, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_g, cap), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, cap), jnp.int32),
+        interpret=interpret,
+    )(pts, rect, size[:, None])
+
+
 @functools.partial(jax.jit, static_argnames=("block_g", "interpret"))
 def window_filter_pallas(pts, rect, size, block_g: int = 8,
                          interpret: bool = False):

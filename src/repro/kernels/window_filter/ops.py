@@ -3,8 +3,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .kernel import window_filter_pallas
-from .ref import window_filter_ref
+from .kernel import window_filter_pallas, window_match_pallas
+from .ref import window_filter_ref, window_match_ref
 
 
 def window_filter(pts, rect, size, *, backend: str = "xla",
@@ -21,3 +21,21 @@ def window_filter(pts, rect, size, *, backend: str = "xla",
     out = window_filter_pallas(pts, rect, size, block_g=block_g,
                                interpret=interpret)
     return out[:G]
+
+
+def window_match(pts, rect, size, *, backend: str = "xla",
+                 block_g: int = 8, interpret: bool = False):
+    """Index-emitting variant of `window_filter`: the (G, cap) bool
+    membership mask of valid points inside their rectangle, compacted by
+    the serving engines into row-id buffers for range retrieval."""
+    if backend == "xla":
+        return window_match_ref(pts, rect, size)
+    G = pts.shape[0]
+    pad = (-G) % block_g
+    if pad:
+        pts = jnp.pad(pts, ((0, pad), (0, 0), (0, 0)))
+        rect = jnp.pad(rect, ((0, pad), (0, 0), (0, 0)))
+        size = jnp.pad(size, (0, pad))
+    out = window_match_pallas(pts, rect, size, block_g=block_g,
+                              interpret=interpret)
+    return out[:G].astype(bool)

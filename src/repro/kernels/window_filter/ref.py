@@ -13,9 +13,18 @@ def _u32_le(a, b):
 def window_filter_ref(pts, rect, size):
     """pts: (G, d, cap) int32 (unsigned coords); rect: (G, d, 2) int32
     [lo, hi]; size: (G,) int32 valid-point count.  -> (G,) int32 counts."""
+    return jnp.sum(window_match_ref(pts, rect, size), axis=-1).astype(jnp.int32)
+
+
+def window_match_ref(pts, rect, size):
+    """Index-emitting variant: per-point membership instead of a count.
+
+    Same inputs as `window_filter_ref`; returns the (G, cap) bool mask of
+    valid points inside the rectangle, which engines compact into row-id
+    buffers (range retrieval) rather than reducing to a scalar."""
     lo = rect[:, :, 0:1]
     hi = rect[:, :, 1:2]
     inside = _u32_le(lo, pts) & _u32_le(pts, hi)  # (G, d, cap)
     ok = jnp.all(inside, axis=1)  # (G, cap)
     valid = jnp.arange(pts.shape[-1])[None, :] < size[:, None]
-    return jnp.sum(ok & valid, axis=-1).astype(jnp.int32)
+    return ok & valid

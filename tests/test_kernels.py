@@ -10,8 +10,8 @@ from repro.core.theta import default_K, random_theta, zorder
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import mha_ref
 from repro.kernels.sfc_encode.ops import sfc_encode
-from repro.kernels.window_filter.ops import window_filter
-from repro.kernels.window_filter.ref import window_filter_ref
+from repro.kernels.window_filter.ops import window_filter, window_match
+from repro.kernels.window_filter.ref import window_filter_ref, window_match_ref
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +75,35 @@ def test_window_filter_kernel_matches_oracle(d, cap, G):
         p = pts[g, :, :size[g]]
         want[g] = np.all((p >= lo[g][:, None]) & (p <= hi[g][:, None]), 0).sum()
     np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("d,cap,G", [(2, 128, 7), (4, 512, 33)])
+def test_window_match_kernel_matches_oracle(d, cap, G):
+    """The index-emitting variant: the per-point membership mask agrees
+    between the Pallas kernel and the jnp oracle, and reduces to the
+    filter's counts."""
+    K = default_K(d)
+    rng = np.random.default_rng(G + 1)
+    pts = rng.integers(0, 2**K, size=(G, d, cap), dtype=np.uint64)
+    lo = rng.integers(0, 2**K, size=(G, d), dtype=np.uint64)
+    hi = np.minimum(lo + rng.integers(0, 2**K, size=(G, d), dtype=np.uint64),
+                    np.uint64(2**K - 1))
+    rect = np.stack([lo, hi], axis=-1)
+    size = rng.integers(0, cap + 1, size=(G,))
+    pts_i = jnp.asarray(pts.astype(np.uint32).view(np.int32))
+    rect_i = jnp.asarray(rect.astype(np.uint32).view(np.int32))
+    size_i = jnp.asarray(size, jnp.int32)
+    ref = np.asarray(window_match_ref(pts_i, rect_i, size_i))
+    got = np.asarray(window_match(pts_i, rect_i, size_i, backend="pallas",
+                                  block_g=4, interpret=True))
+    np.testing.assert_array_equal(got, ref)
+    counts = np.asarray(window_filter_ref(pts_i, rect_i, size_i))
+    np.testing.assert_array_equal(got.sum(axis=1), counts)
+    for g in range(G):
+        p = pts[g, :, :size[g]]
+        inside = np.all((p >= lo[g][:, None]) & (p <= hi[g][:, None]), 0)
+        np.testing.assert_array_equal(got[g, :size[g]], inside)
+        assert not got[g, size[g]:].any()
 
 
 # ---------------------------------------------------------------------------

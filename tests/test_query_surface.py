@@ -1,0 +1,253 @@
+"""The typed query algebra (`repro.api.queries`): COUNT / RANGE-retrieval /
+POINT / kNN parity across engines — including after inserts and deletes —
+with kNN and retrieval verified against brute-force numpy oracles."""
+import numpy as np
+import pytest
+
+from repro.api import (Count, Database, EngineConfig, Knn, Point, Range,
+                       engine_capabilities)
+from repro.api.deltas import rows_in_set
+from repro.core.index import IndexConfig
+from repro.core.query import (brute_force_count, brute_force_knn,
+                              brute_force_range)
+from repro.core.theta import default_K
+from repro.data.synth import make_dataset
+from repro.data.workload import make_workload
+
+ENGINES = [
+    ("cpu", lambda db: None),
+    ("xla", lambda db: EngineConfig(q_chunk=8, max_cand=16, max_hits=256)),
+    ("pallas", lambda db: EngineConfig(q_chunk=8, max_cand=16, max_hits=256,
+                                       interpret=True)),
+]
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    data = make_dataset("osm", 2500, seed=0)
+    K = default_K(2)
+    Ls, Us = make_workload(data, 8, seed=1, K=K)
+    db = Database.fit(data, (Ls, Us), K=K, learn=False,
+                      cfg=IndexConfig(paging="heuristic", page_bytes=1024))
+    for name, cfg in ENGINES[1:]:
+        db.engine(name, cfg(db))
+    return db, data, (Ls, Us)
+
+
+def _attach(db, name):
+    for n, cfg in ENGINES:
+        if n == name and cfg(db) is not None:
+            db.engine(n, cfg(db))
+
+
+# ---------------------------------------------------------------------------
+# COUNT: the typed object is the legacy surface
+# ---------------------------------------------------------------------------
+
+
+def test_count_object_equals_legacy_form(fixture):
+    db, data, (Ls, Us) = fixture
+    want = np.asarray([brute_force_count(data, l, u) for l, u in zip(Ls, Us)])
+    legacy = db.query((Ls, Us), engine="cpu")
+    two_arg = db.query(Ls, Us, engine="cpu")
+    typed = db.query(Count(Ls, Us), engine="cpu")
+    for res in (legacy, two_arg, typed):
+        assert res.exact
+        np.testing.assert_array_equal(res.counts, want)
+
+
+# ---------------------------------------------------------------------------
+# RANGE retrieval: rows themselves, oracle-exact, identical on every engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", [n for n, _ in ENGINES])
+def test_range_retrieval_matches_oracle(fixture, name):
+    db, data, (Ls, Us) = fixture
+    res = db.query(Range(Ls, Us), engine=name)
+    assert res.exact and res.engine == name
+    assert res.offsets[0] == 0 and res.offsets[-1] == len(res.rows)
+    for i, (qL, qU) in enumerate(zip(Ls, Us)):
+        np.testing.assert_array_equal(res.rows_for(i),
+                                      brute_force_range(data, qL, qU),
+                                      err_msg=f"{name} q{i}")
+    counts = db.query(Count(Ls, Us), engine=name).counts
+    np.testing.assert_array_equal(res.counts, counts)
+
+
+def test_range_overflow_escalation_stays_exact(fixture):
+    """max_cand=1 and max_hits=1 force both overflow dimensions; doubling
+    escalation (with the CPU net) must still return the exact rows."""
+    db, data, (Ls, Us) = fixture
+    db.engine("xla", EngineConfig(q_chunk=8, max_cand=1, max_hits=1))
+    try:
+        res = db.query(Range(Ls, Us))
+        assert res.exact
+        assert np.any(res.overflowed > 0)
+        assert res.escalations > 0 or res.cpu_fallbacks > 0
+        for i, (qL, qU) in enumerate(zip(Ls, Us)):
+            np.testing.assert_array_equal(res.rows_for(i),
+                                          brute_force_range(data, qL, qU))
+    finally:
+        _attach(db, "xla")   # restore the module fixture's config
+
+
+# ---------------------------------------------------------------------------
+# POINT lookup
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", [n for n, _ in ENGINES])
+def test_point_lookup_present_and_absent(fixture, name):
+    db, data, (Ls, Us) = fixture
+    present = data[::500]
+    absent = np.asarray([[1, 2], [0, 0]], dtype=np.uint64)
+    absent = absent[~rows_in_set(absent, data)]
+    xs = np.concatenate([present, absent])
+    res = db.query(Point(xs), engine=name)
+    assert res.engine == name and res.exact
+    assert res.found[:len(present)].all(), name
+    assert not res.found[len(present):].any(), name
+
+
+# ---------------------------------------------------------------------------
+# kNN: brute-force numpy oracle, both metrics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["cpu", "xla"])
+@pytest.mark.parametrize("metric", ["l2", "linf"])
+def test_knn_matches_bruteforce_oracle(fixture, name, metric):
+    db, data, (Ls, Us) = fixture
+    centers = np.concatenate([data[5:8], np.asarray([[7, 9]], np.uint64)])
+    res = db.query(Knn(centers, k=6, metric=metric), engine=name)
+    assert res.engine == name
+    for i, c in enumerate(centers):
+        want, wdists = brute_force_knn(data, c, 6, metric)
+        np.testing.assert_array_equal(res.neighbors_for(i), want,
+                                      err_msg=f"{name}/{metric} c{i}")
+        np.testing.assert_array_equal(res.dists_for(i),
+                                      np.asarray(wdists, dtype=np.float64))
+        # ascending-distance order within each center
+        assert np.all(np.diff(res.dists_for(i)) >= 0)
+
+
+def test_knn_k_exceeding_live_rows_returns_all(fixture):
+    db, data, _ = fixture
+    small = Database.fit(data[:7], K=db.index.K, learn=False)
+    res = small.query(Knn(data[0], k=100))
+    assert len(res.neighbors_for(0)) == 7
+
+
+# ---------------------------------------------------------------------------
+# parity after inserts and deletes (the LMSFCb delta path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mutated():
+    data = make_dataset("osm", 2000, seed=3)
+    K = default_K(2)
+    Ls, Us = make_workload(data, 8, seed=4, K=K)
+    db = Database.fit(data, (Ls, Us), K=K, learn=False,
+                      cfg=IndexConfig(paging="heuristic", page_bytes=2048))
+    for name, cfg in ENGINES[1:]:
+        db.engine(name, cfg(db))
+    rng = np.random.default_rng(5)
+    new = np.unique(rng.integers(0, 2**K, size=(150, 2), dtype=np.uint64),
+                    axis=0)
+    new = new[~rows_in_set(new, data)]
+    db.insert(new)
+    dead = np.stack([data[5], data[50], new[0]])
+    assert db.delete(dead) == 3
+    logical = np.concatenate([data, new])
+    logical = np.unique(logical[~rows_in_set(logical, dead)], axis=0)
+    return db, logical, new, dead, (Ls, Us)
+
+
+@pytest.mark.parametrize("name", [n for n, _ in ENGINES])
+def test_range_and_point_parity_after_updates(mutated, name):
+    db, logical, new, dead, (Ls, Us) = mutated
+    res = db.query(Range(Ls, Us), engine=name)
+    assert res.exact
+    for i, (qL, qU) in enumerate(zip(Ls, Us)):
+        np.testing.assert_array_equal(res.rows_for(i),
+                                      brute_force_range(logical, qL, qU),
+                                      err_msg=f"{name} q{i}")
+    pt = db.query(Point(np.concatenate([new[1:4], dead])), engine=name)
+    assert pt.found[:3].all(), name       # delta rows are found
+    assert not pt.found[3:].any(), name   # tombstoned rows are not
+
+
+@pytest.mark.parametrize("name", ["cpu", "xla"])
+def test_knn_parity_after_updates(mutated, name):
+    db, logical, new, dead, _ = mutated
+    centers = np.stack([new[1], dead[0], logical[17]])
+    res = db.query(Knn(centers, k=5), engine=name)
+    for i, c in enumerate(centers):
+        want, _ = brute_force_knn(logical, c, 5, "l2")
+        np.testing.assert_array_equal(res.neighbors_for(i), want,
+                                      err_msg=f"{name} c{i}")
+
+
+# ---------------------------------------------------------------------------
+# planner: capability-declared routing, CPU exactness net
+# ---------------------------------------------------------------------------
+
+
+def test_capability_matrix_registered():
+    caps = engine_capabilities()
+    assert caps["cpu"] == {"count", "range", "point", "knn"}
+    assert {"count", "range", "point", "knn"} <= caps["xla"]
+    assert caps["xla"] == caps["pallas"]
+    assert "count" in caps["distributed"]
+    assert "range" not in caps["distributed"]
+
+
+def test_planner_routes_unsupported_kinds_to_cpu(fixture):
+    db, data, (Ls, Us) = fixture
+    db.engine("distributed", EngineConfig(q_chunk=8,
+                                          max_cand=db.num_pages))
+    try:
+        cnt = db.query(Count(Ls, Us))
+        assert cnt.engine == "distributed" and cnt.exact
+        rr = db.query(Range(Ls, Us))
+        assert rr.engine == "cpu"          # planner fallback
+        for i, (qL, qU) in enumerate(zip(Ls, Us)):
+            np.testing.assert_array_equal(rr.rows_for(i),
+                                          brute_force_range(data, qL, qU))
+        nn = db.query(Knn(data[3], k=3))
+        assert nn.engine == "cpu"
+        pt = db.query(Point(data[3]))
+        assert pt.engine == "distributed" and pt.found[0]
+    finally:
+        db._active = None                  # detach for other tests
+
+
+# ---------------------------------------------------------------------------
+# input validation (satellite): bad rects fail loudly, not wrongly
+# ---------------------------------------------------------------------------
+
+
+def test_inverted_rect_raises(fixture):
+    db, data, (Ls, Us) = fixture
+    with pytest.raises(ValueError, match="Ls > Us"):
+        db.query((Us, Ls), engine="cpu")
+    with pytest.raises(ValueError, match="Ls > Us"):
+        db.query(Range(Us, Ls), engine="cpu")
+
+
+def test_dim_mismatch_raises(fixture):
+    db, data, _ = fixture
+    bad = np.zeros((2, 3), dtype=np.uint64)
+    with pytest.raises(ValueError, match="dimension"):
+        db.query((bad, bad), engine="cpu")
+    with pytest.raises(ValueError, match="dimension"):
+        db.query(Point(np.zeros(3, dtype=np.uint64)), engine="cpu")
+
+
+def test_knn_constructor_validation():
+    with pytest.raises(ValueError, match="metric"):
+        Knn(np.zeros((1, 2), dtype=np.uint64), k=3, metric="cosine")
+    with pytest.raises(ValueError, match="k must be"):
+        Knn(np.zeros((1, 2), dtype=np.uint64), k=0)

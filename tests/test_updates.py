@@ -2,8 +2,10 @@
 periodic rebuild (LMSFCa) — through the `repro.api.Database` facade, plus
 the legacy free-function shims."""
 import numpy as np
+import pytest
 
-from repro.api import Database, FractionRebuildPolicy
+from repro.api import Database, EngineConfig, FractionRebuildPolicy
+from repro.api.deltas import rows_in_set
 from repro.core import index as index_mod
 from repro.core.index import IndexConfig, LMSFCIndex
 from repro.core.query import brute_force_count, query_count
@@ -50,6 +52,39 @@ def test_database_insert_delete_rebuild_exact():
     db.rebuild()
     assert db.store.epoch == 0 and not db.store.deltas
     np.testing.assert_array_equal(db.query((Ls, Us)).counts, want)
+
+
+@pytest.mark.parametrize("name,cfg", [
+    ("cpu", None),
+    ("xla", EngineConfig(q_chunk=8, max_cand=24)),
+    ("pallas", EngineConfig(q_chunk=8, max_cand=24, interpret=True)),
+])
+def test_updates_under_piecewise_curve_cross_engine(name, cfg):
+    """Insert/delete → exact query parity on every engine when the index
+    was built on a `PiecewiseCurve` (per-region θ; the delta path must
+    stay correct under the region-dispatched encode)."""
+    data, (Ls, Us), new_pts, K = _fixture(seed=23, n=2000, n_new=150)
+    db = Database.fit(data, (Ls, Us), K=K, learn=False, curve="piecewise",
+                      cfg=IndexConfig(paging="heuristic", page_bytes=2048))
+    assert db.curve.kind == "piecewise"
+    new_pts = new_pts[~rows_in_set(new_pts, data)]
+    db.insert(new_pts)
+    deleted = np.stack([data[5], data[77], new_pts[0]])
+    assert db.delete(deleted) == 3
+    logical = _logical(data, new_pts, deleted)
+    want = np.asarray([brute_force_count(logical, l, u)
+                       for l, u in zip(Ls, Us)])
+    if cfg is not None:
+        db.engine(name, cfg)
+    res = db.query((Ls, Us), engine=name)
+    assert res.exact
+    np.testing.assert_array_equal(res.counts, want)
+    # a rebuild folds the deltas and keeps the piecewise curve
+    db.rebuild()
+    assert db.curve.kind == "piecewise"
+    res = db.query((Ls, Us), engine=name)
+    assert res.exact
+    np.testing.assert_array_equal(res.counts, want)
 
 
 def test_legacy_insert_delete_rebuild_exact():
