@@ -1,0 +1,194 @@
+"""Execution-layer benchmark + exactness gate: Session micro-batching vs
+serial dispatch, cold vs warm compiled-fn cache.
+
+Builds a mixed multi-client workload (Count / Range / Point / Knn
+submissions with varying batch sizes), runs it three ways through one
+`repro.api.Database` —
+
+  serial       — one `db.query` per submission (the facade's old posture)
+  session/cold — coalesced through `db.session()` on a cold executor
+                 (pays the bucketed compiles)
+  session/warm — the same stream replayed on the warm cache
+
+— and hard-asserts two properties before reporting throughput, so the CI
+``exec-smoke`` job gates on them:
+
+  1. every Session result is bit-identical to its serial counterpart
+     (determinism regardless of coalescing), and
+  2. shape bucketing saved at least one recompile: the batch sizes raw-pad
+     to more distinct device shapes than they bucket to, and the executor
+     compiled only the bucketed set.
+
+Writes BENCH_exec.json (uploaded as a CI artifact).
+
+    PYTHONPATH=src python benchmarks/bench_exec_throughput.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.api import Count, Database, EngineConfig, Knn, Point, Range
+from repro.core.index import IndexConfig
+from repro.core.serve import bucket_pow2
+from repro.core.theta import default_K
+from repro.data.synth import make_dataset
+from repro.data.workload import make_workload
+
+FIELDS = ("counts", "rows", "offsets", "found", "neighbors", "dists")
+
+
+def build_stream(data, K, n_rounds, seed=0):
+    """Interleaved multi-client submissions; count batch sizes deliberately
+    straddle q_chunk multiples so raw padding would compile more shapes
+    than bucketing does."""
+    rng = np.random.default_rng(seed)
+    count_sizes = [9, 17, 25, 29, 15][: max(3, n_rounds)]
+    stream = []
+    for r in range(n_rounds):
+        q = count_sizes[r % len(count_sizes)]
+        stream.append(("count", Count(*make_workload(data, q, seed=seed + r,
+                                                     K=K))))
+        stream.append(("range", Range(*make_workload(data, 4 + r % 3,
+                                                     seed=50 + r, K=K))))
+        xs = data[rng.integers(0, len(data), size=6 + r % 4)]
+        stream.append(("point", Point(xs)))
+        cs = data[rng.integers(0, len(data), size=2)]
+        stream.append(("knn", Knn(cs, k=4, metric="l2")))
+    return stream, count_sizes
+
+
+def run_serial(db, stream, engine):
+    t0 = time.perf_counter()
+    out = [db.query(q, engine=engine) for _, q in stream]
+    return out, time.perf_counter() - t0
+
+
+def run_session(db, stream, engine, tick=None):
+    s = db.session(engine=engine, tick=tick)
+    t0 = time.perf_counter()
+    tickets = [s.submit(q, client=f"client{i % 4}")
+               for i, (_, q) in enumerate(stream)]
+    s.flush()
+    out = [t.result() for t in tickets]
+    return out, time.perf_counter() - t0, s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the CI job")
+    ap.add_argument("--out", default="BENCH_exec.json")
+    ap.add_argument("--dataset", default="osm")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    n = args.n or (3000 if args.smoke else 40_000)
+    rounds = args.rounds or (3 if args.smoke else 8)
+    data = make_dataset(args.dataset, n, seed=args.seed)
+    K = default_K(data.shape[1])
+    Ls_tr, Us_tr = make_workload(data, 16, seed=1, K=K)
+    q_chunk = 8
+
+    def fresh_db():
+        db = Database.fit(data, (Ls_tr, Us_tr), K=K, learn=False,
+                          cfg=IndexConfig(paging="heuristic",
+                                          page_bytes=2048))
+        db.engine("xla", EngineConfig(q_chunk=q_chunk, max_cand=32,
+                                      max_hits=512))
+        return db
+
+    stream, count_sizes = build_stream(data, K, rounds, seed=args.seed)
+    total_q = sum(len(r.normalized()[0]) if isinstance(r.normalized(), tuple)
+                  else len(r.normalized()) for _, r in stream)
+    print(f"dataset={args.dataset} n={len(data)} submissions={len(stream)} "
+          f"sub-queries={total_q}")
+
+    report = {"n": len(data), "submissions": len(stream),
+              "sub_queries": int(total_q), "timings_s": {}, "cache": {}}
+
+    db = fresh_db()
+    # -- session, cold cache (pays the bucketed compiles) -------------------
+    sess_cold, t_cold, _ = run_session(db, stream, "xla")
+    cold = db.executor.cache.snapshot()
+    report["timings_s"]["session_cold"] = t_cold
+    # -- session, warm cache ------------------------------------------------
+    sess_warm, t_warm, _ = run_session(db, stream, "xla")
+    warm = db.executor.cache.snapshot()   # before serial runs mutate it
+    report["timings_s"]["session_warm"] = t_warm
+    # -- serial, warm cache (same db: identical compiled state) -------------
+    serial, t_serial = run_serial(db, stream, "xla")
+    report["timings_s"]["serial_warm"] = t_serial
+    # -- serial on the CPU reference engine ---------------------------------
+    serial_cpu, t_cpu = run_serial(db, stream, "cpu")
+    report["timings_s"]["serial_cpu"] = t_cpu
+
+    # ---- gate 1: session == serial, bit-identical, every submission -------
+    for i, (got_c, got_w, want, want_cpu) in enumerate(
+            zip(sess_cold, sess_warm, serial, serial_cpu)):
+        for other, tag in ((got_c, "cold"), (got_w, "warm"),
+                           (want_cpu, "cpu")):
+            for f in FIELDS:
+                if hasattr(want, f):
+                    np.testing.assert_array_equal(
+                        getattr(other, f), getattr(want, f),
+                        err_msg=f"session({tag}) != serial at sub#{i}.{f}")
+    print(f"determinism: session(cold) == session(warm) == serial(xla) == "
+          f"serial(cpu) on {len(stream)} submissions ✓")
+
+    # ---- gate 2: shape bucketing saved >= 1 recompile ----------------------
+    # measured, not inferred: replay the count batch sizes serially on a
+    # fresh database whose candidate budget is overflow-free (no
+    # escalation -> the compile count is exactly the distinct first-pass
+    # batch shapes) and compare the executor's observed compiles against
+    # the shapes raw q_chunk padding would have produced
+    raw_shapes = {-(-q // q_chunk) * q_chunk for q in count_sizes}
+    bucket_shapes = {bucket_pow2(q, q_chunk) for q in count_sizes}
+    db2 = fresh_db()
+    db2.engine("xla", EngineConfig(q_chunk=q_chunk, max_cand=2**20))
+    for i, qn in enumerate(count_sizes):
+        db2.query(Count(*make_workload(data, qn, seed=args.seed + i, K=K)))
+    observed = db2.executor.cache.compiles
+    saved = len(raw_shapes) - observed
+    assert observed == len(bucket_shapes), (
+        f"bucketing regressed: {observed} compiles for count batch sizes "
+        f"{count_sizes}, expected the bucketed set {sorted(bucket_shapes)}")
+    assert saved >= 1, (
+        f"workload must straddle buckets: raw {sorted(raw_shapes)} vs "
+        f"{observed} observed compiles")
+    # warm replay hit the cache for everything: no new fns, no new traces
+    assert warm.misses == cold.misses, "warm replay built new fns"
+    assert warm.compiles == cold.compiles, "warm replay retraced"
+    assert warm.hits > cold.hits
+    report["cache"] = {
+        "fn_hits": warm.hits, "fn_misses": warm.misses,
+        "compiles": warm.compiles,
+        "raw_count_shapes": sorted(raw_shapes),
+        "bucketed_count_shapes": sorted(bucket_shapes),
+        "observed_count_compiles": observed,
+        "recompiles_saved_by_bucketing": saved,
+    }
+    print(f"shape buckets: count batches compiled {observed} kernels "
+          f"{sorted(bucket_shapes)} instead of {len(raw_shapes)} "
+          f"{sorted(raw_shapes)} -> {saved} recompile(s) saved; warm "
+          f"replay: 0 new compiles, {warm.hits - cold.hits} cache hits ✓")
+
+    qps = {k: total_q / v for k, v in report["timings_s"].items()}
+    report["queries_per_s"] = qps
+    for k in ("session_cold", "session_warm", "serial_warm", "serial_cpu"):
+        print(f"[{k:13s}] {report['timings_s'][k]*1e3:9.1f} ms  "
+              f"{qps[k]:10.0f} q/s")
+    report["coalescing_speedup_warm"] = t_serial / t_warm
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

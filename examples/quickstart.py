@@ -9,7 +9,7 @@ import time
 
 import numpy as np
 
-from repro.api import Database, Knn, Point, Range
+from repro.api import Count, Database, Knn, Point, Range
 from repro.baselines.zm import build_zm_index
 from repro.core.query import (brute_force_count, brute_force_knn,
                               brute_force_range, run_workload)
@@ -67,6 +67,20 @@ def main():
         np.testing.assert_array_equal(nn.neighbors_for(i), oracle)
     print(f"Point: 5/5 found ✓   Knn: k=5 matches the brute-force oracle "
           f"on {len(centers)} centers ✓")
+
+    print("execution layer: explain() + Session micro-batching...")
+    print(db.explain(Count(Ls_te[:8], Us_te[:8])))
+    with db.session() as s:                      # 3 clients, one tick
+        t1 = s.submit(Count(Ls_te[:8], Us_te[:8]), client="alice")
+        t2 = s.submit(Knn(centers, k=5), client="bob")
+        t3 = s.submit(Count(Ls_te[8:16], Us_te[8:16]), client="carol")
+    serial = db.query(Count(Ls_te[:16], Us_te[:16]))
+    np.testing.assert_array_equal(
+        np.concatenate([t1.result().counts, t3.result().counts]),
+        serial.counts)
+    np.testing.assert_array_equal(t2.result().neighbors, nn.neighbors)
+    print(f"session: 3 clients coalesced into {s.batches_run} batches, "
+          f"results == serial ✓")
 
     print("LMSFCb updates: insert 100 rows, tombstone one...")
     rng = np.random.default_rng(7)

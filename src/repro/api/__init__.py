@@ -6,6 +6,13 @@ learning (a global θ or a BMTree-style `PiecewiseCurve`, see README
 XLA / Pallas / distributed shard_map), LMSFCb delta updates, and LMSFCa
 rebuilds — with exact counts by construction on every engine.
 
+Execution is first-class (`repro.api.exec`): `db.explain(q)` returns the
+structured `QueryPlan` (engine routing, shape buckets, escalation
+ladder), the `Executor` runs plans through a bounded shape-bucketed
+compiled-fn cache, `db.session()` micro-batches interleaved multi-client
+submissions, and `Router` serves one logical dataset from N shard
+Databases with exact scatter/merge.
+
 See `Database` for the quickstart and README.md § API for the migration
 table from the pre-facade call sites.
 """
@@ -15,6 +22,8 @@ from .database import Database
 from .deltas import DeltaStore, get_delta_store
 from .engines import (BaseEngine, StaleServingError, engine_capabilities,
                       engine_names, make_engine, register_engine)
+from .exec import (CacheStats, ExecAccounting, Executor, Planner, QueryPlan,
+                   Router, RouterPlan, Session, ShardSpec, Step, Ticket)
 from .policy import FractionRebuildPolicy, NeverRebuild, RebuildPolicy
 from .queries import Count, Knn, Point, Query, Range
 from .result import (EngineConfig, KnnResult, PointResult, QueryResult,
@@ -30,4 +39,8 @@ __all__ = [
     "Query", "Count", "Range", "Point", "Knn",
     "EngineConfig", "QueryResult", "RangeResult", "PointResult",
     "KnnResult",
+    "QueryPlan", "Planner", "Step", "ExecAccounting",
+    "Executor", "CacheStats",
+    "Session", "Ticket",
+    "Router", "RouterPlan", "ShardSpec",
 ]

@@ -16,30 +16,40 @@ Quickstart::
     nn  = db.query(Knn(centers, k=5, metric="l2"))      # exact kNN
     db.insert([x, y]); db.delete(old_row)               # LMSFCb deltas
     res = db.query(Ls_test, Us_test)                    # auto-refresh, exact
+    print(db.explain(Count(Ls_test, Us_test)))          # the structured plan
+    with db.session() as s:                             # micro-batcher
+        t = s.submit(Count(Ls_test, Us_test))
+    t.result().counts                                   # == serial execution
 
 `query` dispatches on the typed algebra (`repro.api.queries`); a plain
-``(Ls, Us)`` still means COUNT.  Engines declare the kinds they execute
-natively (`capabilities`), and the planner routes the rest to the CPU
-engine.  Every engine is **exact by construction**: queries whose
-candidate-page set (or, for retrieval, row-id buffer) overflows its bound
-are automatically escalated (retried doubled, with a final CPU fallback),
-so results can be trusted regardless of the engine or its tuning.
+``(Ls, Us)`` still means COUNT.  Planning and execution are first-class
+(`repro.api.exec`): the `Planner` routes kinds an engine doesn't declare
+in `capabilities` to the CPU engine and lays out the shape buckets +
+escalation ladder as an inspectable `QueryPlan` (`db.explain`), and the
+`Executor` runs plans through a bounded shape-bucketed compiled-fn cache
+(`db.executor.cache`).  Every engine is **exact by construction**:
+queries whose candidate-page set (or, for retrieval, row-id buffer)
+overflows its bound are automatically escalated (retried at the next
+ladder rung, with a final CPU fallback), so results can be trusted
+regardless of the engine or its tuning.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
 from ..core.curve import MonotonicCurve, as_curve, default_curve
 from ..core.index import IndexConfig, LMSFCIndex
-from ..core.query import (QueryStats, knn_box, knn_select, lex_sorted_rows,
-                          query_count, query_knn, query_point, query_range)
 from ..core.theta import Theta, default_K
 from .deltas import DeltaStore, get_delta_store
-from .engines import engine_capabilities, make_engine
+from .engines import make_engine
+from .exec.executor import Executor
+from .exec.plan import Planner, QueryPlan
+from .exec.session import Session
 from .policy import FractionRebuildPolicy, RebuildPolicy
-from .queries import Count, Knn, Point, Query, Range, norm_rects
-from .result import (EngineConfig, KnnResult, PointResult, QueryResult,
-                     RangeResult)
+from .queries import norm_rects
+from .result import EngineConfig
 
 _FAMILIES = ("global", "piecewise")
 
@@ -83,21 +93,6 @@ def _resolve_curve_arg(curve, theta):
 _norm_rects = norm_rects
 
 
-def _concat_rows(parts, d, dist_parts=None):
-    """Per-query row lists -> (rows, offsets[, dists]) with empty-safe
-    concatenation (the result assembly shared by Range and Knn)."""
-    offsets = np.zeros(len(parts) + 1, dtype=np.int64)
-    np.cumsum([len(p) for p in parts], out=offsets[1:])
-    rows = (np.concatenate(parts) if offsets[-1]
-            else np.empty((0, d), dtype=np.uint64))
-    if dist_parts is None:
-        return rows, offsets
-    dists = (np.concatenate([np.asarray(v, dtype=np.float64)
-                             for v in dist_parts]) if offsets[-1]
-             else np.empty(0, dtype=np.float64))
-    return rows, offsets, dists
-
-
 class Database:
     """Facade over index construction, query engines, and updates."""
 
@@ -110,6 +105,8 @@ class Database:
         self.fit_result = None          # SMBOResult when θ was learned
         self._engines = {}
         self._active = None
+        self.executor = Executor(self)  # shape-bucketed compiled-fn cache
+        self.planner = Planner(self)    # routing + escalation ladders
 
     # ------------------------------------------------------------------
     # construction
@@ -166,6 +163,9 @@ class Database:
     def engine(self, name: str, config: EngineConfig = None) -> "Database":
         """Attach (or re-attach with a new config) an execution engine and
         make it the default for `query`.  Chainable."""
+        old = self._engines.get(name)
+        if old is not None:
+            self.executor.evict(old)    # don't leak the old engine's fns
         self._engines[name] = make_engine(name, self, config)
         self._active = name
         return self
@@ -178,33 +178,43 @@ class Database:
     def engines(self) -> dict:
         return dict(self._engines)
 
+    def _peek_engine(self, name: str):
+        """Attach `name` with a default config on first use WITHOUT
+        touching the active engine (planning must be side-effect-free on
+        dispatch state — `explain` goes through here)."""
+        if name not in self._engines:
+            self._engines[name] = make_engine(name, self, EngineConfig())
+        return name, self._engines[name]
+
     def _get_engine(self, name: str = None):
         """Resolve a per-call engine override without changing the active
         engine (attaching with a default config on first use)."""
-        name = name or self._active or "cpu"
-        if name not in self._engines:
-            self._engines[name] = make_engine(name, self, EngineConfig())
+        name, eng = self._peek_engine(name or self._active or "cpu")
         if self._active is None:
             self._active = name
-        return name, self._engines[name]
+        return name, eng
 
     # ------------------------------------------------------------------
-    # query (typed algebra; exact by construction on every engine)
+    # query (typed algebra; planned + executed by repro.api.exec)
     # ------------------------------------------------------------------
+    def explain(self, q, U=None, *, engine: str = None) -> QueryPlan:
+        """The structured execution plan for one query — engine routing,
+        padded shape buckets, candidate/hit budgets, and the full overflow
+        escalation ladder — without executing anything (replaces the old
+        string-only ``plan()``).  ``print(db.explain(q))`` pretty-prints;
+        after ``db.query(q)``, ``result.plan.accounting`` holds what the
+        execution actually cost (compiles, escalations, fallbacks)."""
+        return self.planner.plan(q, U, engine=engine)
+
     def plan(self, kind: str, engine: str = None) -> str:
-        """The query planner: resolve which engine serves a query kind.
-
-        The requested (or active) engine serves kinds it declares in its
-        `capabilities`; anything else routes to the CPU engine, so every
-        query type is answerable — exactly — whatever engine is active.
-        """
-        requested = engine or self._active or "cpu"
-        eng = self._engines.get(requested)
-        caps = (eng.capabilities if eng is not None
-                else engine_capabilities().get(requested))
-        if caps is None:
-            return requested       # unknown name: let _get_engine raise
-        return requested if kind in caps else "cpu"
+        """Deprecated: the old string-only planner surface.  Returns just
+        the resolved engine name; use :meth:`explain` for the structured
+        `QueryPlan` (shapes, budgets, escalation ladder)."""
+        warnings.warn(
+            "Database.plan(kind) is deprecated; use Database.explain(q) "
+            "for the structured QueryPlan (this shim returns only the "
+            "resolved engine name)", DeprecationWarning, stacklevel=2)
+        return self.planner.resolve(kind, engine)
 
     def query(self, q, U=None, *, engine: str = None):
         """Run one query of the typed algebra (`repro.api.queries`).
@@ -215,178 +225,18 @@ class Database:
         Us))``).  `engine` overrides the active engine for this call; kinds
         the engine does not support natively are routed to the CPU engine
         by the planner.  Returns the kind's result type (`QueryResult`,
-        `RangeResult`, `PointResult`, `KnnResult`).
+        `RangeResult`, `PointResult`, `KnnResult`) with the executed
+        `QueryPlan` (per-stage accounting filled) attached as ``.plan``.
         """
-        if not isinstance(q, Query):
-            q = Count(q, U)
-        elif U is not None:
-            raise ValueError("U= applies only to the legacy (Ls, Us) COUNT "
-                             "form, not to typed queries")
-        name, eng = self._get_engine(self.plan(q.kind, engine))
-        if q.kind == "count":
-            return self._query_count(q, name, eng)
-        if q.kind == "range":
-            return self._query_range(q, name, eng)
-        if q.kind == "point":
-            return self._query_point(q, name, eng)
-        return self._query_knn(q, name, eng)
+        plan = self.planner.plan(q, U, engine=engine)
+        return self.executor.execute(plan, q, U)
 
-    # -- COUNT -----------------------------------------------------------
-    def _count_exact(self, Ls, Us, eng, *, force_exact: bool = False):
-        """Counts + overflow escalation (doubled max_cand, CPU fallback).
-        `force_exact` applies the CPU fallback even when the engine config
-        disabled it (Point/Knn promise exactness unconditionally)."""
-        eng.sync(eng.cfg.on_stale)
-        counts, over, stats = eng.run(Ls, Us)
-        first_over = over.copy()
-        rounds = 0
-        fallbacks = 0
-        if over.any() and eng.cfg.escalate:
-            max_cand = eng.cfg.max_cand
-            bound = eng.overflow_free_cand
-            while over.any() and max_cand < bound:
-                max_cand = min(2 * max_cand, bound)
-                idx = np.nonzero(over)[0]
-                c2, o2, _ = eng.run(Ls[idx], Us[idx], max_cand=max_cand)
-                counts = counts.copy()
-                counts[idx] = c2
-                over = np.zeros_like(over)
-                over[idx] = o2
-                rounds += 1
-        if over.any() and (eng.cfg.cpu_fallback or force_exact):
-            counts = counts.copy()
-            for i in np.nonzero(over)[0]:
-                counts[i] = query_count(self.index, Ls[i], Us[i]).result
-                fallbacks += 1
-            over = np.zeros_like(over)
-        return counts, first_over, over, rounds, fallbacks, stats
-
-    def _query_count(self, q: Count, name, eng) -> QueryResult:
-        Ls, Us = q.normalized(d=self.d)
-        counts, first_over, over, rounds, fallbacks, stats = \
-            self._count_exact(Ls, Us, eng)
-        if stats is None:
-            stats = QueryStats(result=int(counts.sum()), subqueries=len(Ls))
-        return QueryResult(counts=counts, engine=name, epoch=self.store.epoch,
-                           stats=stats, overflowed=first_over,
-                           residual_overflow=over, escalations=rounds,
-                           cpu_fallbacks=fallbacks)
-
-    # -- RANGE retrieval -------------------------------------------------
-    def _range_exact(self, Ls, Us, eng, *, force_exact: bool = False):
-        """Row retrieval + two-dimensional overflow escalation: candidate
-        pages (max_cand) and the row-id buffer (max_hits) are doubled
-        independently until exact, with the CPU walk as the final net."""
-        eng.sync(eng.cfg.on_stale)
-        rows_list, co, ho, stats = eng.run_range(Ls, Us)
-        first_over = (co + ho).astype(np.int32)
-        over = ((co > 0) | (ho > 0)).astype(np.int32)
-        rounds = 0
-        fallbacks = 0
-        if over.any() and eng.cfg.escalate:
-            max_cand = eng.cfg.max_cand
-            max_hits = eng.cfg.max_hits
-            cb = eng.overflow_free_cand
-            hb = eng.overflow_free_hits
-            while over.any() and (max_cand < cb or max_hits < hb):
-                if co.any():
-                    max_cand = min(2 * max_cand, cb)
-                if ho.any():
-                    max_hits = min(2 * max_hits, hb)
-                idx = np.nonzero(over)[0]
-                rl2, co2, ho2, _ = eng.run_range(
-                    Ls[idx], Us[idx], max_cand=max_cand, max_hits=max_hits)
-                for j, i in enumerate(idx):
-                    rows_list[i] = rl2[j]
-                co = np.zeros_like(co)
-                ho = np.zeros_like(ho)
-                co[idx] = co2
-                ho[idx] = ho2
-                over = ((co > 0) | (ho > 0)).astype(np.int32)
-                rounds += 1
-        if over.any() and (eng.cfg.cpu_fallback or force_exact):
-            for i in np.nonzero(over)[0]:
-                rows_list[i] = query_range(self.index, Ls[i], Us[i])[0]
-                fallbacks += 1
-            over = np.zeros_like(over)
-        return rows_list, first_over, over, rounds, fallbacks, stats
-
-    def _query_range(self, q: Range, name, eng) -> RangeResult:
-        Ls, Us = q.normalized(d=self.d)
-        rows_list, first_over, over, rounds, fallbacks, stats = \
-            self._range_exact(Ls, Us, eng)
-        rows_list = [lex_sorted_rows(r) for r in rows_list]  # canonical order
-        rows, offsets = _concat_rows(rows_list, self.d)
-        if stats is None:
-            stats = QueryStats(result=int(offsets[-1]), subqueries=len(Ls))
-        return RangeResult(rows=rows, offsets=offsets, engine=name,
-                           epoch=self.store.epoch, stats=stats,
-                           overflowed=first_over, residual_overflow=over,
-                           escalations=rounds, cpu_fallbacks=fallbacks)
-
-    # -- POINT lookup ----------------------------------------------------
-    def _query_point(self, q: Point, name, eng) -> PointResult:
-        xs = q.normalized(d=self.d)
-        if name == "cpu":
-            found = query_point(self.index, xs)
-            return PointResult(found=found, engine=name,
-                               epoch=self.store.epoch)
-        # device engines: a point is a degenerate one-cell window; counts
-        # are exact by construction, so found == (count > 0)
-        counts, _, _, rounds, fallbacks, stats = \
-            self._count_exact(xs, xs, eng, force_exact=True)
-        return PointResult(found=counts > 0, engine=name,
-                           epoch=self.store.epoch, stats=stats,
-                           escalations=rounds, cpu_fallbacks=fallbacks)
-
-    # -- kNN -------------------------------------------------------------
-    def _query_knn(self, q: Knn, name, eng) -> KnnResult:
-        """Exact kNN: seed an upper-bound radius from expanding page rings
-        around each center's curve address, retrieve the covering box
-        exactly through the engine's native range path, refine with exact
-        integer distances (deterministic tie-break)."""
-        centers = q.normalized(d=self.d)
-        k, metric = int(q.k), q.metric
-        epoch = self.store.epoch
-        if name == "cpu":
-            stats = QueryStats()
-            parts, dist_parts = [], []
-            for c in centers:
-                rows, dd, st = query_knn(self.index, c, k, metric)
-                parts.append(rows)
-                dist_parts.append(dd)
-                stats.merge(st)
-            rows, offsets, dd = _concat_rows(parts, self.d, dist_parts)
-            return KnnResult(neighbors=rows, offsets=offsets, dists=dd,
-                             k=k, metric=metric, engine=name, epoch=epoch,
-                             stats=stats)
-        from ..core.serve import knn_seed_radius   # lazy: imports jax
-        eng.sync(eng.cfg.on_stale)
-        radius = knn_seed_radius(eng._host, self.index.curve, centers, k,
-                                 metric)
-        total = int(np.asarray(eng._host.page_size).sum())
-        kk = min(k, total)
-        if kk <= 0:
-            rows, offsets, dd = _concat_rows([[]] * len(centers), self.d,
-                                             [[]] * len(centers))
-            return KnnResult(neighbors=rows, offsets=offsets, dists=dd,
-                             k=k, metric=metric, engine=name, epoch=epoch)
-        Ls = np.empty_like(centers)
-        Us = np.empty_like(centers)
-        for i, (c, r) in enumerate(zip(centers, radius)):
-            Ls[i], Us[i] = knn_box(c, r, self.index.K)
-        rows_list, _, _, rounds, fallbacks, stats = \
-            self._range_exact(Ls, Us, eng, force_exact=True)
-        parts, dist_parts = [], []
-        for c, rows in zip(centers, rows_list):
-            sel, dd = knn_select(rows, c, kk, metric)
-            parts.append(sel)
-            dist_parts.append(dd)
-        rows, offsets, dd = _concat_rows(parts, self.d, dist_parts)
-        return KnnResult(neighbors=rows, offsets=offsets, dists=dd, k=k,
-                         metric=metric, engine=name, epoch=epoch,
-                         stats=stats, escalations=rounds,
-                         cpu_fallbacks=fallbacks)
+    def session(self, *, engine: str = None, tick: int = None) -> Session:
+        """A micro-batching `Session` over this database: interleaved
+        multi-client Count/Range/Point/Knn submissions are coalesced into
+        engine-shaped super-batches and demultiplexed in submission order
+        (deterministic — bit-identical to serial execution)."""
+        return Session(self, engine=engine, tick=tick)
 
     # ------------------------------------------------------------------
     # updates (LMSFCb deltas + LMSFCa rebuild)

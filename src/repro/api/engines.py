@@ -25,16 +25,19 @@ every query type is answerable — exactly — on every configured engine.
 Device engines keep a host-side copy of their `ServingArrays` plus the
 DeltaStore epoch they were packed at; `sync()` re-packs only the pages
 dirtied since that epoch (growing the point capacity when a delta page
-overflows it) and re-uploads.
+overflows it) and re-uploads.  Compiled query fns do NOT live on the
+engine: they come from the Database's `Executor` (repro.api.exec) — a
+bounded, shape-bucketed cache shared across engines, so overflow
+escalation cannot leak a fresh jitted fn per budget pair.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from ..core.query import QueryStats, query_count, query_range
-from ..core.serve import (make_distributed_query_fn, make_query_fn,
-                          make_range_fn, pack_serving_arrays,
-                          shard_serving_arrays)
+from ..core.serve import (bucket_pow2, make_distributed_query_fn,
+                          make_query_fn, make_range_fn, pack_query_rects,
+                          pack_serving_arrays, shard_serving_arrays)
 from ..core.zorder64 import u64_to_z64
 from .result import EngineConfig
 
@@ -149,9 +152,9 @@ class _DeviceEngine(BaseEngine):
         super().__init__(db, cfg)
         self._host = None        # numpy ServingArrays (pack source of truth)
         self._arrays = None      # device ServingArrays
-        self._qfns = {}          # max_cand -> compiled count fn
-        self._rfns = {}          # (max_cand, max_hits) -> compiled range fn
         self.built_epoch = -1
+        # compiled query fns live on the Database's Executor (a bounded,
+        # shape-bucketed cache shared across engines) — not on the engine
 
     # -- config ------------------------------------------------------------
     @property
@@ -166,8 +169,7 @@ class _DeviceEngine(BaseEngine):
     def invalidate(self):
         self._host = None
         self._arrays = None
-        self._qfns.clear()
-        self._rfns.clear()
+        self.db.executor.evict(self)
         self.built_epoch = -1
 
     def sync(self, on_stale: str = "refresh"):
@@ -217,9 +219,8 @@ class _DeviceEngine(BaseEngine):
             grown = max(need, 2 * cap)
             self._host = pack_serving_arrays(
                 index, pad_pages_to=self.pad_pages_to, cap=grown)
-            self._qfns.clear()          # cap is a static shape
-            self._rfns.clear()
-            dirty = store.dirty_since(0)
+            self.db.executor.evict(self)   # cap is a static shape: drop the
+            dirty = store.dirty_since(0)   # fns traced at the old cap
             live = {p: store.live_page_rows(p) for p in dirty}
         h = self._host
         pts_u32 = h.points.view(np.uint32)
@@ -251,38 +252,37 @@ class _DeviceEngine(BaseEngine):
             self.sync()
         return max(1, int(self._host.page_size.sum()))
 
-    def _qfn(self, max_cand: int):
+    def _build_qfn(self, max_cand: int):
         raise NotImplementedError
 
-    def _rfn(self, max_cand: int, max_hits: int):
+    def _build_rfn(self, max_cand: int, max_hits: int):
         raise NotImplementedError
 
     def _device_queries(self, Ls, Us):
         """Pack a uint64 rect batch as a padded (Qp, d, 2) int32 device
-        array (queries padded to q_chunk by repeating the last)."""
+        array.  Qp is the batch's *shape bucket* (q_chunk * 2^j), so
+        varying traffic sizes retrace a bounded set of shapes."""
         import jax.numpy as jnp
-        Q = len(Ls)
-        qc = self.cfg.q_chunk
-        Qp = -(-Q // qc) * qc
-        rect = np.stack([Ls, Us], axis=-1).astype(np.uint32)   # (Q, d, 2)
-        if Qp != Q:
-            rect = np.concatenate([rect, np.repeat(rect[-1:], Qp - Q, axis=0)])
-        return jnp.asarray(rect.view(np.int32))
+        Qp = bucket_pow2(len(Ls), self.cfg.q_chunk)
+        return jnp.asarray(pack_query_rects(Ls, Us, Qp))
 
     def run(self, Ls, Us, max_cand=None):
+        if len(Ls) == 0:      # nothing to pad or launch (off-bucket shape)
+            return (np.empty(0, dtype=np.int64),
+                    np.empty(0, dtype=np.int32), None)
         if self._arrays is None:
             self.sync()
         Q = len(Ls)
         q = self._device_queries(Ls, Us)
-        fn = self._qfns.get(max_cand or self.cfg.max_cand)
-        if fn is None:
-            fn = self._qfn(max_cand or self.cfg.max_cand)
-            self._qfns[max_cand or self.cfg.max_cand] = fn
+        fn = self.db.executor.count_fn(self, max_cand or self.cfg.max_cand)
         counts, over = fn(self._arrays, q)
         return (np.asarray(counts)[:Q].astype(np.int64),
                 np.asarray(over)[:Q].astype(np.int32), None)
 
     def run_range(self, Ls, Us, max_cand=None, max_hits=None):
+        if len(Ls) == 0:      # nothing to pad or launch (off-bucket shape)
+            zeros = np.empty(0, dtype=np.int32)
+            return [], zeros, zeros.copy(), None
         if self._arrays is None:
             self.sync()
         P_pad, _, slot_cap = self._host.points.shape
@@ -294,11 +294,9 @@ class _DeviceEngine(BaseEngine):
                 f"ids; got {P_pad} pages x cap {slot_cap}")
         Q = len(Ls)
         q = self._device_queries(Ls, Us)
-        key = (max_cand or self.cfg.max_cand, max_hits or self.cfg.max_hits)
-        fn = self._rfns.get(key)
-        if fn is None:
-            fn = self._rfn(*key)
-            self._rfns[key] = fn
+        fn = self.db.executor.range_fn(
+            self, max_cand or self.cfg.max_cand,
+            max_hits or self.cfg.max_hits)
         ids, n_hits, co, ho = fn(self._arrays, q)
         ids = np.asarray(ids)[:Q]
         co = np.asarray(co)[:Q].astype(np.int32)
@@ -326,14 +324,14 @@ class XlaEngine(_DeviceEngine):
     default_backend = "xla"
     capabilities = frozenset({"count", "range", "point", "knn"})
 
-    def _qfn(self, max_cand):
+    def _build_qfn(self, max_cand):
         import jax
         return jax.jit(make_query_fn(
             self.db.index.curve, k_maxsplit=self.cfg.k_maxsplit,
             max_cand=max_cand, q_chunk=self.cfg.q_chunk,
             backend=self.backend, interpret=self.cfg.interpret))
 
-    def _rfn(self, max_cand, max_hits):
+    def _build_rfn(self, max_cand, max_hits):
         import jax
         return jax.jit(make_range_fn(
             self.db.index.curve, k_maxsplit=self.cfg.k_maxsplit,
@@ -382,7 +380,7 @@ class DistributedEngine(_DeviceEngine):
     def _upload(self):
         self._arrays = shard_serving_arrays(self._host, self.mesh)
 
-    def _qfn(self, max_cand):
+    def _build_qfn(self, max_cand):
         import jax
         fn, _ = make_distributed_query_fn(
             self.db.index.curve, self.mesh, k_maxsplit=self.cfg.k_maxsplit,

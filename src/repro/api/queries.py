@@ -78,6 +78,12 @@ class Query:
 
     kind = "?"
 
+    def coalesce_key(self) -> tuple:
+        """Submissions with equal keys may be coalesced into one engine
+        super-batch by a `Session` (payload rows concatenate; per-query
+        parameters must match).  Default: the kind alone."""
+        return (self.kind,)
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Count(Query):
@@ -136,6 +142,11 @@ class Knn(Query):
         if self.metric not in METRICS:
             raise ValueError(f"unknown metric {self.metric!r}; expected one "
                              f"of {METRICS}")
+
+    def coalesce_key(self) -> tuple:
+        """kNN batches share a device super-batch only at equal (k, metric)
+        — those are per-batch parameters, not per-row payload."""
+        return (self.kind, int(self.k), self.metric)
 
     def normalized(self, d=None):
         return norm_points(self.centers, d=d)

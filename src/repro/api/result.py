@@ -61,6 +61,7 @@ class QueryResult:
                                           #   unless escalation was disabled
     escalations: int = 0       # doubled-max_cand retry rounds that ran
     cpu_fallbacks: int = 0     # queries resolved by the CPU exactness net
+    plan: Any = None           # the executed QueryPlan (accounting filled)
 
     def __post_init__(self):
         if self.residual_overflow is None:
@@ -94,6 +95,7 @@ class RangeResult:
     residual_overflow: np.ndarray = None  # (Q,) after escalation
     escalations: int = 0       # doubled-bound retry rounds that ran
     cpu_fallbacks: int = 0     # queries resolved by the CPU exactness net
+    plan: Any = None           # the executed QueryPlan (accounting filled)
 
     def __post_init__(self):
         if self.residual_overflow is None:
@@ -132,6 +134,7 @@ class PointResult:
     stats: QueryStats = None
     escalations: int = 0
     cpu_fallbacks: int = 0
+    plan: Any = None           # the executed QueryPlan (accounting filled)
 
     @property
     def exact(self) -> bool:
@@ -165,6 +168,7 @@ class KnnResult:
     stats: QueryStats = None
     escalations: int = 0
     cpu_fallbacks: int = 0
+    plan: Any = None           # the executed QueryPlan (accounting filled)
 
     @property
     def exact(self) -> bool:

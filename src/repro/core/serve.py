@@ -129,6 +129,42 @@ def build_serving_arrays(index: LMSFCIndex, pad_pages_to: int = 1,
 
 
 # ---------------------------------------------------------------------------
+# shape buckets: the compiled-kernel surface the executor caches against
+# ---------------------------------------------------------------------------
+
+
+def bucket_pow2(n: int, multiple: int = 1) -> int:
+    """Smallest ``multiple * 2**j >= max(n, 1)`` — the shape-bucket boundary
+    used by the exec layer so varying batch sizes / candidate budgets hit a
+    bounded set of compiled kernels instead of recompiling per shape."""
+    if multiple < 1:
+        raise ValueError(f"multiple must be >= 1; got {multiple}")
+    chunks = -(-max(int(n), 1) // multiple)
+    return multiple * (1 << (chunks - 1).bit_length())
+
+
+def pack_query_rects(Ls, Us, Q_pad: int = None) -> np.ndarray:
+    """Pack uint64 rect bounds as the (Q_pad, d, 2) int32 host array the
+    query fns consume, padded up to `Q_pad` by repeating the last rect (a
+    repeated query is exact and cheap; results beyond Q are sliced off).
+    This is the bucket-aware twin of the inline padding `make_query_fn`
+    callers used to hand-roll; `Q_pad` must be a q_chunk multiple."""
+    rect = np.stack([np.asarray(Ls), np.asarray(Us)],
+                    axis=-1).astype(np.uint32)            # (Q, d, 2)
+    Q = rect.shape[0]
+    if Q_pad is not None and Q_pad != Q:
+        if Q_pad < Q:
+            raise ValueError(f"Q_pad={Q_pad} < batch size {Q}")
+        if Q == 0:
+            # no rect to repeat; np.repeat would silently return an
+            # unpadded (0, d, 2) array, breaking the padding contract —
+            # callers must short-circuit empty batches instead
+            raise ValueError("cannot pad an empty query batch")
+        rect = np.concatenate([rect, np.repeat(rect[-1:], Q_pad - Q, axis=0)])
+    return rect.view(np.int32)
+
+
+# ---------------------------------------------------------------------------
 # single-shard batched query engine
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,455 @@
+"""The execution layer (`repro.api.exec`): structured plans, the
+shape-bucketed compiled-fn cache (bounded — no per-budget jitted-fn
+leak), Session micro-batching determinism, and the multi-shard Router
+against an unsharded oracle."""
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (Count, Database, EngineConfig, Knn, Point, QueryPlan,
+                       Range, Router, ShardSpec)
+from repro.core.index import IndexConfig
+from repro.core.serve import bucket_pow2, pack_query_rects
+from repro.core.theta import default_K
+from repro.data.synth import make_dataset
+from repro.data.workload import make_workload
+from repro.dist.sharding import ShardingRules
+
+
+def _db(n=2500, n_q=12, seed=0, page_bytes=1024, **eng):
+    data = make_dataset("osm", n, seed=seed)
+    K = default_K(2)
+    Ls, Us = make_workload(data, n_q, seed=seed + 1, K=K)
+    db = Database.fit(data, (Ls, Us), K=K, learn=False,
+                      cfg=IndexConfig(paging="heuristic",
+                                      page_bytes=page_bytes))
+    if eng:
+        db.engine("xla", EngineConfig(**eng))
+    return db, data, (Ls, Us)
+
+
+# ---------------------------------------------------------------------------
+# shape buckets
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_pow2():
+    assert [bucket_pow2(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert bucket_pow2(9, 8) == 16 and bucket_pow2(8, 8) == 8
+    assert bucket_pow2(17, 8) == 32 and bucket_pow2(0, 4) == 4
+    with pytest.raises(ValueError):
+        bucket_pow2(4, 0)
+
+
+def test_pack_query_rects_pads_by_repeating_last():
+    Ls = np.asarray([[1, 2], [3, 4]], dtype=np.uint64)
+    Us = Ls + np.uint64(5)
+    rect = pack_query_rects(Ls, Us, 4)
+    assert rect.shape == (4, 2, 2) and rect.dtype == np.int32
+    np.testing.assert_array_equal(rect[2], rect[1])
+    np.testing.assert_array_equal(rect[3], rect[1])
+    with pytest.raises(ValueError, match="Q_pad"):
+        pack_query_rects(Ls, Us, 1)
+    empty = np.empty((0, 2), dtype=np.uint64)
+    with pytest.raises(ValueError, match="empty"):
+        pack_query_rects(empty, empty, 8)
+
+
+def test_empty_batches_skip_the_device_entirely():
+    db, data, _ = _db(n=1500, n_q=6, q_chunk=8)
+    empty = np.empty((0, 2), dtype=np.uint64)
+    res = db.query(Count(empty, empty))
+    assert len(res) == 0 and res.exact and res.engine == "xla"
+    rr = db.query(Range(empty, empty))
+    assert len(rr) == 0 and rr.rows.shape == (0, 2)
+    pt = db.query(Point(empty))
+    assert len(pt) == 0
+    # no off-bucket (0, d, 2) kernel was traced for any of the above
+    assert db.executor.cache.compiles == 0
+    assert all(t[1][0] != 0 for t in db.executor._traced)
+
+
+# ---------------------------------------------------------------------------
+# explain: the structured plan (and the deprecated string shim)
+# ---------------------------------------------------------------------------
+
+
+def test_explain_returns_structured_plan():
+    db, data, (Ls, Us) = _db(q_chunk=8, max_cand=2, max_hits=16)
+    plan = db.explain(Range(Ls, Us))
+    assert isinstance(plan, QueryPlan)
+    assert plan.kind == "range" and plan.engine == "xla" and not plan.routed
+    assert plan.Q == len(Ls) and plan.Q_pad == bucket_pow2(len(Ls), 8)
+    assert plan.max_cand == 2 and plan.max_hits == 16
+    # the ladder doubles both budgets (bucket values) up to the bounds
+    cands = [s.max_cand for s in plan.ladder]
+    assert cands and cands[-1] == plan.cand_bound
+    assert all(b in (2 * a, plan.cand_bound) for a, b in zip(cands, cands[1:]))
+    assert plan.ladder[-1].max_hits == plan.hit_bound
+    assert plan.cpu_fallback
+    assert "escalation ladder" in plan.describe()
+    # nothing executed yet
+    assert plan.accounting.device_calls == 0
+    # cpu plan: no padding, no ladder
+    cplan = db.explain(Count(Ls, Us), engine="cpu")
+    assert cplan.engine == "cpu" and cplan.Q_pad == cplan.Q
+    assert cplan.ladder == ()
+
+
+def test_explain_routes_unsupported_kinds_to_cpu():
+    db, data, (Ls, Us) = _db(n=1500, n_q=8)
+    db.engine("distributed", EngineConfig(q_chunk=8, max_cand=64))
+    plan = db.explain(Range(Ls, Us))
+    assert plan.engine == "cpu" and plan.requested == "distributed"
+    assert plan.routed
+    assert db.explain(Count(Ls, Us)).engine == "distributed"
+
+
+def test_explain_does_not_flip_the_active_engine():
+    db, data, (Ls, Us) = _db(n=1500, n_q=6)   # no engine attached
+    assert db.active_engine is None
+    plan = db.explain(Count(Ls, Us), engine="xla")
+    assert plan.engine == "xla"
+    assert db.active_engine is None           # planning is side-effect-free
+    assert db.query(Count(Ls, Us)).engine == "cpu"
+
+
+def test_plan_string_shim_deprecated():
+    db, data, _ = _db(n=1500, n_q=6, q_chunk=8)
+    with pytest.warns(DeprecationWarning, match="explain"):
+        assert db.plan("count") == "xla"
+    with pytest.warns(DeprecationWarning):
+        assert db.plan("range", engine="distributed") == "cpu"
+
+
+def test_invalid_payload_rejected_at_plan_time():
+    db, data, (Ls, Us) = _db(n=1500, n_q=6, q_chunk=8)
+    with pytest.raises(ValueError, match="dimension"):
+        db.explain(Point(np.zeros(3, dtype=np.uint64)))
+    with pytest.raises(ValueError, match="Ls > Us"):
+        db.explain(Count(Us, Ls))
+
+
+def test_query_attaches_executed_plan_with_accounting():
+    db, data, (Ls, Us) = _db(q_chunk=8, max_cand=1)
+    res = db.query(Count(Ls, Us))
+    assert res.exact and isinstance(res.plan, QueryPlan)
+    acct = res.plan.accounting
+    assert acct.device_calls >= 1
+    assert acct.escalations == res.escalations
+    assert acct.cpu_fallbacks == res.cpu_fallbacks
+    assert acct.cache_misses >= 1          # cold cache compiled something
+    cpu = db.query(Count(Ls, Us), engine="cpu")
+    assert cpu.plan.accounting.pages_scanned > 0
+
+
+# ---------------------------------------------------------------------------
+# executor cache: bounded, bucketed, shared (satellite: no per-budget leak)
+# ---------------------------------------------------------------------------
+
+
+def test_escalation_budgets_stay_on_buckets_and_cache_is_bounded():
+    """max_cand=1 / max_hits=1 force the full escalation ladder on every
+    batch; the compiled-fn cache must only ever hold bucket shapes, so its
+    size stays <= the bucket count instead of growing per budget pair."""
+    db, data, (Ls, Us) = _db(q_chunk=8, max_cand=1, max_hits=1)
+    eng = db.engines["xla"]
+    r1 = db.query(Count(Ls, Us))
+    r2 = db.query(Range(Ls, Us))
+    assert r1.exact and r2.exact
+    assert r1.escalations > 0 and r2.escalations > 0
+    cb, hb = eng.overflow_free_cand, eng.overflow_free_hits
+    for key in db.executor._fns:
+        for budget in key[2:]:
+            assert budget in (cb, hb) or budget == bucket_pow2(budget), key
+    n_buckets = (math.ceil(math.log2(cb)) + math.ceil(math.log2(hb)) + 4)
+    assert db.executor.cache_size(eng) <= n_buckets
+    # warm traffic: pure cache hits, zero new compiles
+    before = db.executor.cache.snapshot()
+    db.query(Count(Ls, Us))
+    db.query(Range(Ls, Us))
+    after = db.executor.cache
+    assert after.misses == before.misses
+    assert after.compiles == before.compiles
+    assert after.hits > before.hits
+
+
+def test_shape_bucketing_saves_recompiles_across_batch_sizes():
+    """Batch sizes 17, 25, 29 pad to raw q_chunk multiples {24, 32, 32} (2
+    distinct compiles without bucketing) but to buckets {32, 32, 32} — one
+    compile serves them all."""
+    db, data, _ = _db(q_chunk=8, max_cand=64)
+    K = db.index.K
+    sizes = (17, 25, 29)
+    raw = {-(-q // 8) * 8 for q in sizes}
+    bucketed = {bucket_pow2(q, 8) for q in sizes}
+    assert len(bucketed) < len(raw)
+    db.query(Count(*make_workload(data, 9, seed=5, K=K)))   # warm: bucket 16
+    before = db.executor.cache.snapshot()
+    for i, q in enumerate(sizes):
+        db.query(Count(*make_workload(data, q, seed=10 + i, K=K)))
+    compiled = db.executor.cache.compiles - before.compiles
+    assert compiled == len(bucketed)                        # == 1
+    assert db.executor.cache.misses == before.misses        # same jitted fn
+
+
+def test_engine_reattach_and_rebuild_evict_cache_entries():
+    db, data, (Ls, Us) = _db(n=1500, n_q=8, q_chunk=8)
+    db.query(Count(Ls, Us))
+    assert db.executor.cache_size() > 0
+    db.engine("xla", EngineConfig(q_chunk=8))               # re-attach
+    assert db.executor.cache.evictions > 0
+    db.query(Count(Ls, Us))
+    old = db.engines["xla"]
+    db.rebuild()
+    assert db.executor.cache_size(old) == 0                 # invalidated
+
+
+# ---------------------------------------------------------------------------
+# device POINT batching (satellite): (Q, d) probes = one device call
+# ---------------------------------------------------------------------------
+
+
+def test_point_batch_is_one_device_call():
+    db, data, _ = _db(q_chunk=8, max_cand=64)
+    xs = np.concatenate([data[::300], np.asarray([[1, 2]], np.uint64)])
+    res = db.query(Point(xs))
+    assert res.engine == "xla"
+    assert res.plan.accounting.device_calls == 1
+    np.testing.assert_array_equal(
+        res.found, db.query(Point(xs), engine="cpu").found)
+
+
+# ---------------------------------------------------------------------------
+# Session: determinism under any coalescing (satellite stress test)
+# ---------------------------------------------------------------------------
+
+
+def _mixed_workload(data, Ls, Us):
+    """An interleaved multi-client mixed-kind submission stream."""
+    return [
+        ("alice", Count(Ls[:3], Us[:3])),
+        ("bob", Knn(data[5:7], k=3)),
+        ("carol", Range(Ls[3:6], Us[3:6])),
+        ("alice", Point(np.concatenate([data[::500],
+                                        [[3, 1]]]).astype(np.uint64))),
+        ("bob", Count(Ls[6:], Us[6:])),
+        ("carol", Knn(data[40:41], k=5, metric="linf")),
+        ("alice", Knn(data[8:10], k=3)),            # coalesces with bob's
+        ("bob", Range(Ls[:2], Us[:2])),
+        ("carol", Count(Ls[2:4], Us[2:4])),
+    ]
+
+
+def _assert_same_result(got, want, ctx=""):
+    for f in ("counts", "rows", "offsets", "found", "neighbors", "dists"):
+        if hasattr(want, f):
+            np.testing.assert_array_equal(getattr(got, f), getattr(want, f),
+                                          err_msg=f"{ctx} field {f}")
+
+
+@pytest.mark.parametrize("engine", ["cpu", "xla"])
+def test_session_bit_identical_to_serial_any_tick(engine):
+    db, data, (Ls, Us) = _db(q_chunk=8, max_cand=8, max_hits=64)
+    subs = _mixed_workload(data, Ls, Us)
+    serial = [db.query(q, engine=engine) for _, q in subs]
+    for tick in (None, 1, 2, 4, len(subs)):
+        s = db.session(engine=engine, tick=tick)
+        tickets = [s.submit(q, client=c) for c, q in subs]
+        s.flush()
+        for i, (t, want) in enumerate(zip(tickets, serial)):
+            _assert_same_result(t.result(), want,
+                                ctx=f"{engine} tick={tick} sub#{i}")
+        assert all(t.done for t in tickets)
+
+
+def test_session_coalesces_compatible_kinds():
+    db, data, (Ls, Us) = _db(n=1500, n_q=8, q_chunk=8)
+    s = db.session()
+    s.submit(Count(Ls[:2], Us[:2]))
+    s.submit(Count(Ls[2:5], Us[2:5]))
+    s.submit(Knn(data[:1], k=3))
+    s.submit(Knn(data[1:2], k=3))
+    s.submit(Knn(data[2:3], k=4))          # different k: its own batch
+    assert s.flush() == 3                  # count + knn(k=3) + knn(k=4)
+
+
+def test_session_point_submissions_coalesce_to_one_device_call():
+    db, data, _ = _db(q_chunk=8, max_cand=64)
+    db.query(Point(data[:1]))              # warm the compiled fn
+    s = db.session(engine="xla")
+    tickets = [s.submit(Point(data[i * 7:i * 7 + 3]), client=f"c{i}")
+               for i in range(4)]
+    assert s.flush() == 1                  # 12 probes, one super-batch
+    res = tickets[0].result()
+    assert res.plan.accounting.device_calls == 1
+    for i, t in enumerate(tickets):
+        assert t.result().found.all(), i
+
+
+def test_session_flush_failure_requeues_unresolved_submissions():
+    """A batch that raises mid-flush must not strand the other clients'
+    tickets: unresolved submissions go back on the queue and a retry
+    resolves them."""
+    db, data, (Ls, Us) = _db(n=1500, n_q=8, q_chunk=8)
+    s = db.session(tick=1)
+    t1 = s.submit(Count(Ls[:2], Us[:2]), client="a")
+    t2 = s.submit(Count(Ls[2:4], Us[2:4]), client="b")
+    t3 = s.submit(Count(Ls[4:], Us[4:]), client="c")
+    orig = db.query
+    calls = {"n": 0}
+
+    def flaky(q, U=None, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("transient engine failure")
+        return orig(q, U, **kw)
+
+    db.query = flaky
+    try:
+        with pytest.raises(RuntimeError, match="transient"):
+            s.flush()
+        assert t1.done and not t2.done and not t3.done
+        assert len(s) == 2                   # requeued, not dropped
+        s.flush()                            # retry succeeds
+    finally:
+        db.query = orig
+    for t, (a, b) in ((t1, (0, 2)), (t2, (2, 4)), (t3, (4, len(Ls)))):
+        np.testing.assert_array_equal(
+            t.result().counts, db.query(Count(Ls[a:b], Us[a:b])).counts)
+
+
+def test_session_rejects_bad_submissions_at_submit_time():
+    db, data, (Ls, Us) = _db(n=1500, n_q=6, q_chunk=8)
+    s = db.session()
+    with pytest.raises(ValueError, match="dimension"):
+        s.submit(Count(np.zeros((2, 3), np.uint64), np.ones((2, 3), np.uint64)))
+    with pytest.raises(ValueError, match="Ls > Us"):
+        s.submit(Range(Us, Ls))
+    with pytest.raises(TypeError, match="typed query"):
+        s.submit((Ls, Us))
+    assert len(s) == 0                     # nothing half-enqueued
+    t = s.submit(Count(Ls, Us))
+    assert len(s) == 1 and t.result().exact
+
+
+# ---------------------------------------------------------------------------
+# Router: N shards == one unsharded database, exactly
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sharded():
+    data = make_dataset("osm", 2400, seed=3)
+    K = default_K(2)
+    Ls, Us = make_workload(data, 10, seed=4, K=K)
+    cfg = IndexConfig(paging="heuristic", page_bytes=1024)
+    oracle = Database.fit(data, (Ls, Us), K=K, learn=False, cfg=cfg)
+    router = Router.build(data, 3, K=K, learn=False, cfg=cfg)
+    return router, oracle, data, (Ls, Us)
+
+
+def test_router_count_range_point_match_unsharded_oracle(sharded):
+    router, oracle, data, (Ls, Us) = sharded
+    rc, oc = router.query(Count(Ls, Us)), oracle.query(Count(Ls, Us))
+    np.testing.assert_array_equal(rc.counts, oc.counts)
+    assert rc.engine == "router[3xcpu]"
+    rr, orr = router.query(Range(Ls, Us)), oracle.query(Range(Ls, Us))
+    np.testing.assert_array_equal(rr.rows, orr.rows)    # lex-stitched order
+    np.testing.assert_array_equal(rr.offsets, orr.offsets)
+    xs = np.concatenate([data[::400], [[7, 9]]]).astype(np.uint64)
+    np.testing.assert_array_equal(router.query(Point(xs)).found,
+                                  oracle.query(Point(xs)).found)
+
+
+@pytest.mark.parametrize("metric", ["l2", "linf"])
+def test_router_knn_matches_oracle_including_tie_breaks(sharded, metric):
+    router, oracle, data, _ = sharded
+    centers = np.concatenate([data[5:8], [[50, 50]]]).astype(np.uint64)
+    rk = router.query(Knn(centers, k=6, metric=metric))
+    ok = oracle.query(Knn(centers, k=6, metric=metric))
+    np.testing.assert_array_equal(rk.neighbors, ok.neighbors)
+    np.testing.assert_array_equal(rk.dists, ok.dists)
+    np.testing.assert_array_equal(rk.offsets, ok.offsets)
+
+
+def test_router_knn_tie_breaks_across_shard_boundaries():
+    """Symmetric points equidistant from the center land on different
+    shards; the merged order must still be the exact (dist, lex) one."""
+    c = np.asarray([100, 100], dtype=np.uint64)
+    ring = np.asarray([[100, 90], [100, 110], [90, 100], [110, 100],
+                       [93, 93], [107, 107], [93, 107], [107, 93]],
+                      dtype=np.uint64)
+    K = default_K(2)
+    rng = np.random.default_rng(9)
+    filler = np.unique(rng.integers(0, 2**K, size=(400, 2),
+                                    dtype=np.uint64), axis=0)
+    from repro.api.deltas import rows_in_set
+    filler = filler[~rows_in_set(filler, np.concatenate([ring, c[None]]))]
+    data = np.concatenate([ring, filler])
+    cfg = IndexConfig(paging="heuristic", page_bytes=512)
+    oracle = Database.fit(data, K=K, learn=False, cfg=cfg)
+    router = Router.build(data, 2, K=K, learn=False, cfg=cfg)
+    for k in (2, 4, 8):
+        rk = router.query(Knn(c, k=k))
+        ok = oracle.query(Knn(c, k=k))
+        np.testing.assert_array_equal(rk.neighbors, ok.neighbors, err_msg=str(k))
+        np.testing.assert_array_equal(rk.dists, ok.dists, err_msg=str(k))
+
+
+def test_router_device_engines_and_updates(sharded):
+    router, oracle, data, (Ls, Us) = sharded
+    router.engine("xla", EngineConfig(q_chunk=8, max_cand=16, max_hits=128))
+    res = router.query(Count(Ls, Us), engine="xla")
+    assert res.engine == "router[3xxla]" and res.exact
+    np.testing.assert_array_equal(res.counts,
+                                  oracle.query(Count(Ls, Us)).counts)
+    # updates: inserts scatter round-robin, deletes broadcast
+    new = np.asarray([[11, 13], [17, 19], [23, 29]], dtype=np.uint64)
+    n0 = router.n
+    assert router.insert(new) == 3 and router.n == n0 + 3
+    assert router.query(Point(new)).found.all()
+    assert router.delete(new[0]) == 1
+    assert not router.query(Point(new[:1])).found[0]
+
+
+def test_router_rejects_mixed_dimension_submissions_before_scatter(sharded):
+    router, *_ = sharded
+    with pytest.raises(ValueError, match="dimension"):
+        router.query(Point(np.zeros((2, 5), dtype=np.uint64)))
+    with pytest.raises(ValueError, match="dimension"):
+        router.explain(Count(np.zeros((2, 5), np.uint64),
+                             np.ones((2, 5), np.uint64)))
+
+
+def test_router_explain_scatters_per_shard_plans(sharded):
+    router, oracle, data, (Ls, Us) = sharded
+    rp = router.explain(Knn(data[:2], k=3))
+    assert rp.kind == "knn" and rp.merge == "rerank"
+    assert len(rp.shards) == 3
+    assert all(isinstance(p, QueryPlan) for p in rp.shards)
+    assert "scatter KNN to 3 shards" in rp.describe()
+
+
+def test_shard_spec_reuses_dist_sharding_rules():
+    from jax.sharding import PartitionSpec as P
+    spec = ShardSpec(4)
+    assert isinstance(spec.rules, ShardingRules)
+    assert spec.rules.data_size == 4 and spec.rules.model_size == 1
+    # divisible row count: the "data"-axis split — equal contiguous blocks
+    parts = spec.partition(16)
+    assert [len(p) for p in parts] == [4, 4, 4, 4]
+    assert spec.spec(16) == P("data")
+    np.testing.assert_array_equal(np.concatenate(parts), np.arange(16))
+    # non-divisible: near-even fallback (the rules would replicate; rows
+    # must never replicate — a replicated row double-counts every merge)
+    parts = spec.partition(18)
+    assert sorted(len(p) for p in parts) == [4, 4, 5, 5]
+    assert spec.spec(18) == P(None)
+    assert sum(len(p) for p in parts) == 18
+    with pytest.raises(ValueError, match="n_shards"):
+        ShardSpec(0)
+    with pytest.raises(ValueError, match="at least one shard"):
+        Router([])
