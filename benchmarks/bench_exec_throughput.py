@@ -19,7 +19,12 @@ submissions with varying batch sizes), runs it three ways through one
      to more distinct device shapes than they bucket to, and the executor
      compiled only the bucketed set.
 
-Writes BENCH_exec.json (uploaded as a CI artifact).
+Writes BENCH_exec.json (uploaded as a CI artifact) plus the
+observability report: BENCH_obs.json (per-kind service-latency
+p50/p95/p99 and a stage-level time breakdown from `repro.obs`, with the
+disabled-mode overhead estimate the ``obs-smoke`` CI job gates at <5%)
+and BENCH_obs_trace.json (Perfetto/Chrome-loadable span trace of the
+instrumented replay — drop it on https://ui.perfetto.dev).
 
     PYTHONPATH=src python benchmarks/bench_exec_throughput.py [--smoke] [--out PATH]
 """
@@ -31,6 +36,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.api import Count, Database, EngineConfig, Knn, Point, Range
 from repro.core.index import IndexConfig
 from repro.core.serve import bucket_pow2
@@ -39,6 +45,10 @@ from repro.data.synth import make_dataset
 from repro.data.workload import make_workload
 
 FIELDS = ("counts", "rows", "offsets", "found", "neighbors", "dists")
+
+# the executor's disjoint device-call stages + the off-device stages; the
+# breakdown below reports where instrumented wall time actually went
+STAGES = ("plan", "compile", "device", "escalate", "cpu_net")
 
 
 def build_stream(data, K, n_rounds, seed=0):
@@ -77,11 +87,61 @@ def run_session(db, stream, engine, tick=None):
     return out, time.perf_counter() - t0, s
 
 
+def _hist_labels(m):
+    return dict(m.labels)
+
+
+def stage_breakdown() -> dict:
+    """Where instrumented time went, summed from the obs registry's span
+    histograms into the executor's disjoint stages (seconds)."""
+    out = {k: 0.0 for k in STAGES}
+    for m in obs.registry.metrics():
+        if m.kind != "histogram":
+            continue
+        lb = _hist_labels(m)
+        if m.name == "planner.plan_ns":
+            out["plan"] += m.sum / 1e9
+        elif m.name == "executor.fn_build_ns":
+            out["compile"] += m.sum / 1e9
+        elif m.name == "executor.device_call_ns":
+            stage = {"first": "device"}.get(lb.get("stage"),
+                                            lb.get("stage"))
+            if stage in out:
+                out[stage] += m.sum / 1e9
+        elif m.name == "executor.cpu_net_ns":
+            out["cpu_net"] += m.sum / 1e9
+    return out
+
+
+def per_kind_latency() -> dict:
+    """`session.service_ns{kind=...}` quantiles (ns) per query kind."""
+    out = {}
+    for m in obs.registry.metrics():
+        if m.name == "session.service_ns" and m.kind == "histogram":
+            out[_hist_labels(m)["kind"]] = m.snapshot()
+    return out
+
+
+def disabled_hook_cost_ns(iters: int = 200_000) -> float:
+    """Measured per-call cost of the obs hot-path hooks while disabled
+    (one flag check + the shared null span)."""
+    assert not obs.enabled()
+    t0 = time.perf_counter_ns()
+    for _ in range(iters):
+        with obs.span("bench.noop", kind="x"):
+            pass
+        obs.inc("bench.noop", kind="x")
+        obs.observe("bench.noop", 1, kind="x")
+    return (time.perf_counter_ns() - t0) / (3 * iters)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for the CI job")
     ap.add_argument("--out", default="BENCH_exec.json")
+    ap.add_argument("--obs-out", default="BENCH_obs.json")
+    ap.add_argument("--trace-out", default="BENCH_obs_trace.json")
     ap.add_argument("--dataset", default="osm")
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--rounds", type=int, default=None)
@@ -185,6 +245,70 @@ def main():
               f"{qps[k]:10.0f} q/s")
     report["coalescing_speedup_warm"] = t_serial / t_warm
 
+    # ---- observability report (repro.obs) ---------------------------------
+    # replay the same warm stream with the obs layer ON: per-kind service
+    # latency quantiles, stage-level time breakdown, Perfetto trace — and
+    # assert instrumentation changed nothing (bit-identical results)
+    obs.reset()
+    obs.enable()
+    sess_obs, t_obs, _ = run_session(db, stream, "xla")
+    obs.disable()
+    for i, (got, want) in enumerate(zip(sess_obs, serial)):
+        for f in FIELDS:
+            if hasattr(want, f):
+                np.testing.assert_array_equal(
+                    getattr(got, f), getattr(want, f),
+                    err_msg=f"instrumented session != serial at sub#{i}.{f}")
+    print(f"determinism: instrumented session == serial on {len(stream)} "
+          f"submissions ✓")
+
+    kinds = per_kind_latency()
+    stages = stage_breakdown()
+    spans = len(obs.tracer)
+    n_spans = obs.export_trace(args.trace_out)
+
+    # disabled-mode overhead on the warm coalesced path: measured per-hook
+    # disabled cost x the hook volume the instrumented replay actually
+    # made (3x the span count conservatively covers the counter/gauge/
+    # histogram hooks, which early-return even cheaper than spans),
+    # against the min-of-3 disabled warm replay
+    t_dis = min(run_session(db, stream, "xla")[1] for _ in range(3))
+    hook_ns = disabled_hook_cost_ns()
+    hook_calls = 3 * spans
+    overhead_frac = (hook_calls * hook_ns / 1e9) / t_dis
+    print(f"obs disabled overhead: {hook_calls} hook calls x "
+          f"{hook_ns:.0f} ns = {hook_calls * hook_ns / 1e3:.0f} us over "
+          f"{t_dis * 1e3:.1f} ms warm replay -> {overhead_frac * 100:.2f}%")
+
+    obs_report = {
+        **obs.bench_envelope(),
+        "submissions": len(stream),
+        "sub_queries": int(total_q),
+        "timings_s": {"session_warm_obs": t_obs,
+                      "session_warm_disabled": t_dis},
+        "per_kind": kinds,              # session.service_ns quantiles (ns)
+        "stages_s": stages,             # disjoint executor stage sums
+        "disabled_overhead": {
+            "hook_calls": hook_calls,
+            "hook_cost_ns": hook_ns,
+            "frac": overhead_frac,
+        },
+        "trace": {"file": args.trace_out, "spans": n_spans,
+                  "spans_dropped": obs.tracer.spans_dropped},
+    }
+    with open(args.obs_out, "w") as f:
+        json.dump(obs_report, f, indent=2)
+    for kind in sorted(kinds):
+        q = kinds[kind]
+        print(f"[obs {kind:6s}] p50={q['p50'] / 1e6:7.2f} ms  "
+              f"p95={q['p95'] / 1e6:7.2f} ms  p99={q['p99'] / 1e6:7.2f} ms")
+    print(f"[obs stages] " + "  ".join(
+        f"{k}={v * 1e3:.1f}ms" for k, v in stages.items()))
+    print(f"wrote {args.obs_out} and {args.trace_out} ({n_spans} spans)")
+
+    report["schema"] = obs_report["schema"]
+    report.update({k: obs_report[k] for k in
+                   ("host", "platform", "python", "jax_version")})
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {args.out}")

@@ -1,0 +1,102 @@
+"""Schema gate for the observability benchmark artifacts (CI ``obs-smoke``).
+
+Validates BENCH_obs.json (envelope, per-kind quantiles with
+p50 <= p95 <= p99, disjoint stage breakdown, disabled-overhead budget)
+and BENCH_obs_trace.json (loadable JSON, balanced B/E trace events), so
+a regression in the obs layer — missing metrics, non-monotone quantiles,
+unbalanced span nesting, hot-path bloat — fails the push, not a later
+debugging session.
+
+    PYTHONPATH=src python benchmarks/validate_obs.py \
+        [--report BENCH_obs.json] [--trace BENCH_obs_trace.json] \
+        [--max-overhead 0.05]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.obs import validate_quantiles
+
+REQUIRED_KEYS = ("schema", "host", "jax_version", "per_kind", "stages_s",
+                 "disabled_overhead", "trace")
+KINDS = ("count", "range", "point", "knn")
+STAGES = ("plan", "compile", "device", "escalate", "cpu_net")
+
+
+def validate_report(doc: dict, max_overhead: float) -> None:
+    missing = [k for k in REQUIRED_KEYS if k not in doc]
+    assert not missing, f"BENCH_obs.json missing keys: {missing}"
+    assert doc["schema"] == 1, f"unknown schema {doc['schema']!r}"
+
+    per_kind = doc["per_kind"]
+    for kind in KINDS:
+        assert kind in per_kind, f"per_kind latency missing {kind!r}"
+        validate_quantiles(per_kind[kind])        # p50 <= p95 <= p99
+        assert per_kind[kind]["count"] > 0, f"no {kind} samples recorded"
+
+    stages = doc["stages_s"]
+    for s in STAGES:
+        assert s in stages, f"stage breakdown missing {s!r}"
+        assert stages[s] >= 0, f"negative stage time: {s}={stages[s]}"
+    total = sum(stages.values())
+    assert total > 0, "stage breakdown is all zeros"
+    # the disjoint stages sum to ~the instrumented replay total: no more
+    # than the wall clock (disjointness), and not vanishingly less (the
+    # remainder is python/session overhead, not unaccounted device time)
+    t_obs = doc["timings_s"]["session_warm_obs"]
+    assert total <= 1.05 * t_obs, (
+        f"stage sums {total:.4f}s exceed the instrumented replay "
+        f"{t_obs:.4f}s — stages are double-counting")
+    assert total >= 0.3 * t_obs, (
+        f"stage sums {total:.4f}s cover <30% of the instrumented replay "
+        f"{t_obs:.4f}s — device time is going unaccounted")
+
+    ov = doc["disabled_overhead"]
+    assert ov["hook_calls"] > 0 and ov["hook_cost_ns"] > 0, (
+        f"degenerate overhead measurement: {ov}")
+    assert ov["frac"] < max_overhead, (
+        f"disabled-mode obs overhead {ov['frac'] * 100:.2f}% exceeds the "
+        f"{max_overhead * 100:.0f}% budget on the warm coalesced path")
+
+
+def validate_trace(doc: dict) -> int:
+    events = doc["traceEvents"]
+    assert isinstance(events, list) and events, "empty traceEvents"
+    b = sum(1 for e in events if e["ph"] == "B")
+    e = sum(1 for e in events if e["ph"] == "E")
+    assert b == e, f"unbalanced trace: {b} B events vs {e} E events"
+    last_ts = None
+    for ev in events:
+        assert {"name", "ph", "pid", "tid", "ts"} <= set(ev), (
+            f"malformed trace event: {ev}")
+        assert ev["ph"] in ("B", "E"), f"unexpected phase {ev['ph']!r}"
+        if last_ts is not None:
+            assert ev["ts"] >= last_ts, "trace events not time-sorted"
+        last_ts = ev["ts"]
+    return b
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default="BENCH_obs.json")
+    ap.add_argument("--trace", default="BENCH_obs_trace.json")
+    ap.add_argument("--max-overhead", type=float, default=0.05)
+    args = ap.parse_args()
+
+    with open(args.report) as f:
+        report = json.load(f)
+    validate_report(report, args.max_overhead)
+    print(f"{args.report}: envelope + per-kind quantiles + stage "
+          f"breakdown ok; disabled overhead "
+          f"{report['disabled_overhead']['frac'] * 100:.2f}% < "
+          f"{args.max_overhead * 100:.0f}%")
+
+    with open(args.trace) as f:
+        trace = json.load(f)
+    spans = validate_trace(trace)
+    print(f"{args.trace}: {spans} balanced B/E span pairs, time-sorted ✓")
+
+
+if __name__ == "__main__":
+    main()

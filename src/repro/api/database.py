@@ -35,10 +35,12 @@ regardless of the engine or its tuning.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 
 import numpy as np
 
+from .. import obs
 from ..core.curve import MonotonicCurve, as_curve, default_curve
 from ..core.index import IndexConfig, LMSFCIndex
 from ..core.theta import Theta, default_K
@@ -137,17 +139,21 @@ class Database:
                              f"K={fixed.K}")
         K = K or default_K(d)
         fit_result = None
-        if fixed is None:
-            if learn and workload is not None:
-                fit_result = _learn_curve(data, workload, K, smbo=smbo,
-                                          sample=sample, seed=seed,
-                                          space=family)
-                fixed = fit_result.curve_best
-            else:
-                fixed = default_curve(d, K, family=family,
-                                      depth=(smbo or {}).get("depth", 1))
-        index = LMSFCIndex.build(data, curve=fixed, cfg=cfg,
-                                 workload=workload)
+        with obs.span("database.fit", n=len(data), d=d) as sp:
+            if fixed is None:
+                if learn and workload is not None:
+                    with obs.span("database.fit.learn", family=family):
+                        fit_result = _learn_curve(data, workload, K,
+                                                  smbo=smbo, sample=sample,
+                                                  seed=seed, space=family)
+                    fixed = fit_result.curve_best
+                else:
+                    fixed = default_curve(d, K, family=family,
+                                          depth=(smbo or {}).get("depth", 1))
+            sp.label(learned=fit_result is not None)
+            with obs.span("database.fit.build"):
+                index = LMSFCIndex.build(data, curve=fixed, cfg=cfg,
+                                         workload=workload)
         db = cls(index, policy=policy, workload=workload)
         db.fit_result = fit_result
         return db
@@ -317,6 +323,24 @@ class Database:
     @property
     def num_pages(self) -> int:
         return self.index.num_pages
+
+    def stats(self, *, format: str = "json"):
+        """Current observability snapshot (`repro.obs`): every counter,
+        gauge, and latency histogram (with exact p50/p95/p99) the process
+        recorded, as one flat JSON dict (``format="json"``) or in the
+        Prometheus text exposition format (``format="prometheus"``).
+        Includes this database's executor cache stats under
+        ``executor_cache``.  Best-effort: metrics are empty until
+        `repro.obs.enable()` is called."""
+        if format == "prometheus":
+            return obs.prometheus_text()
+        if format != "json":
+            raise ValueError(f"unknown stats format {format!r}; expected "
+                             f"'json' or 'prometheus'")
+        snap = obs.snapshot()
+        snap["executor_cache"] = dataclasses.asdict(
+            self.executor.cache.snapshot())
+        return snap
 
     def __repr__(self) -> str:
         return (f"Database(n={self.index.n}, d={self.d}, "

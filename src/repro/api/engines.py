@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from .. import obs
 from ..core.query import QueryStats, query_count, query_range
 from ..core.serve import (bucket_pow2, make_distributed_query_fn,
                           make_query_fn, make_range_fn, pack_query_rects,
@@ -177,12 +178,14 @@ class _DeviceEngine(BaseEngine):
         if self._host is None:
             # first pack is a build, not a stale serve: fold in any deltas
             # accumulated before the engine attached, whatever the policy
-            self._host = pack_serving_arrays(
-                self.db.index, pad_pages_to=self.pad_pages_to, cap=self.cfg.cap)
-            self.built_epoch = 0
-            self._repack_dirty(store)
-            self.built_epoch = store.epoch
-            self._upload()
+            with obs.span("engine.sync", engine=self.name, mode="build"):
+                self._host = pack_serving_arrays(
+                    self.db.index, pad_pages_to=self.pad_pages_to,
+                    cap=self.cfg.cap)
+                self.built_epoch = 0
+                self._repack_dirty(store)
+                self.built_epoch = store.epoch
+                self._upload()
             return
         if self.built_epoch >= store.epoch:
             if self._arrays is None:
@@ -197,9 +200,10 @@ class _DeviceEngine(BaseEngine):
                 f"{self.name} arrays at epoch {self.built_epoch} < store "
                 f"epoch {store.epoch}; call refresh() or use "
                 f"on_stale='refresh'")
-        self._repack_dirty(store)
-        self.built_epoch = store.epoch
-        self._upload()
+        with obs.span("engine.sync", engine=self.name, mode="refresh"):
+            self._repack_dirty(store)
+            self.built_epoch = store.epoch
+            self._upload()
 
     def _repack_dirty(self, store):
         """Re-pack only the pages dirtied since `built_epoch` into the host
@@ -237,7 +241,10 @@ class _DeviceEngine(BaseEngine):
     def _upload(self):
         import jax.numpy as jnp
         import jax
-        self._arrays = jax.tree.map(jnp.asarray, self._host)
+        with obs.span("engine.upload", engine=self.name):
+            self._arrays = jax.tree.map(jnp.asarray, self._host)
+            if obs.enabled():
+                jax.block_until_ready(self._arrays)
 
     # -- execution ---------------------------------------------------------
     @property
@@ -378,7 +385,8 @@ class DistributedEngine(_DeviceEngine):
         return int(np.prod(list(self.mesh.shape.values())))
 
     def _upload(self):
-        self._arrays = shard_serving_arrays(self._host, self.mesh)
+        with obs.span("engine.upload", engine=self.name):
+            self._arrays = shard_serving_arrays(self._host, self.mesh)
 
     def _build_qfn(self, max_cand):
         import jax

@@ -22,6 +22,7 @@ import itertools
 
 import numpy as np
 
+from ... import obs
 from ...core.query import (QueryStats, knn_box, knn_select, lex_sorted_rows,
                            query_count, query_knn, query_point, query_range)
 from ...core.serve import bucket_pow2
@@ -42,6 +43,17 @@ class CacheStats:
 
     def snapshot(self) -> "CacheStats":
         return dataclasses.replace(self)
+
+
+def _fence(out):
+    """Block until `out`'s device buffers are actually materialized, so a
+    span around a compiled-fn launch measures real device time instead of
+    async dispatch latency.  Numpy pytrees pass through untouched."""
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:       # fencing is best-effort; results are untouched
+        pass
 
 
 def _concat_rows(parts, d, dist_parts=None):
@@ -69,6 +81,9 @@ class Executor:
         self._fns = {}            # (engine serial, kind, *budgets) -> fn
         self._traced = set()      # (key, input shapes) — compile events
         self._serial = itertools.count()
+        self._stage = "first"     # obs label for in-flight device calls:
+                                  #   'first' | 'escalate' ('compile' when
+                                  #   the launch traces a new shape)
 
     # ------------------------------------------------------------------
     # compiled-fn cache (engines fetch their query fns here)
@@ -91,33 +106,48 @@ class Executor:
         """The (bucketed) compiled count fn for `eng`; builds on miss."""
         mc = self.bucket_cand(eng, max_cand)
         key = (self._engine_key(eng), "count", mc)
-        return self._get(key, lambda: eng._build_qfn(mc))
+        return self._get(key, lambda: eng._build_qfn(mc), eng.name)
 
     def range_fn(self, eng, max_cand: int, max_hits: int):
         """The (bucketed) compiled range fn for `eng`; builds on miss."""
         mc = self.bucket_cand(eng, max_cand)
         mh = self.bucket_hits(eng, max_hits)
         key = (self._engine_key(eng), "range", mc, mh)
-        return self._get(key, lambda: eng._build_rfn(mc, mh))
+        return self._get(key, lambda: eng._build_rfn(mc, mh), eng.name)
 
-    def _get(self, key, build):
+    def _get(self, key, build, eng_name="?"):
         fn = self._fns.get(key)
         if fn is None:
             self.cache.misses += 1
-            inner = build()
+            obs.inc("executor.fn_cache.misses", engine=eng_name)
+            with obs.span("executor.fn_build", engine=eng_name,
+                          kind=key[1]):
+                inner = build()
 
-            def fn(arrays, queries, _key=key, _inner=inner):
+            def fn(arrays, queries, _key=key, _inner=inner, _eng=eng_name):
                 self.cache.calls += 1
                 tk = (_key, tuple(queries.shape),
                       tuple(np.shape(arrays.points)))
-                if tk not in self._traced:
+                new_trace = tk not in self._traced
+                if new_trace:
                     self._traced.add(tk)
                     self.cache.compiles += 1
-                return _inner(arrays, queries)
+                if not obs.enabled():
+                    return _inner(arrays, queries)
+                # first launch of a (fn, shape) combo includes the XLA
+                # trace+compile, so it books under stage='compile', not
+                # the device stages; the fence makes device time real
+                stage = "compile" if new_trace else self._stage
+                with obs.span("executor.device_call", engine=_eng,
+                              kind=_key[1], stage=stage):
+                    out = _inner(arrays, queries)
+                    _fence(out)
+                return out
 
             self._fns[key] = fn
         else:
             self.cache.hits += 1
+            obs.inc("executor.fn_cache.hits", engine=eng_name)
         return fn
 
     def evict(self, eng) -> int:
@@ -156,7 +186,8 @@ class Executor:
         name, eng = self.db._get_engine(plan.engine)
         run = {"count": self._exec_count, "range": self._exec_range,
                "point": self._exec_point, "knn": self._exec_knn}[plan.kind]
-        res = run(plan, q, name, eng)
+        with obs.span("executor.execute", kind=plan.kind, engine=name):
+            res = run(plan, q, name, eng)
         acct = plan.accounting
         acct.cache_hits += self.cache.hits - before.hits
         acct.cache_misses += self.cache.misses - before.misses
@@ -165,6 +196,11 @@ class Executor:
         acct.cpu_fallbacks += res.cpu_fallbacks
         if res.stats is not None:
             acct.pages_scanned += res.stats.pages_accessed
+        if obs.enabled():
+            obs.inc("executor.queries", plan.Q, kind=plan.kind, engine=name)
+            obs.inc("executor.escalations", res.escalations, kind=plan.kind)
+            obs.inc("executor.cpu_fallbacks", res.cpu_fallbacks,
+                    kind=plan.kind)
         return res
 
     # -- COUNT (also the device POINT lowering) ------------------------
@@ -180,33 +216,42 @@ class Executor:
         if over.any():
             cb = eng.overflow_free_cand
             last = plan.max_cand
-            for step in plan.ladder:
-                if not over.any():
-                    break
-                mc = min(step.max_cand, cb)
-                if mc == last:
-                    continue
-                last = mc
-                idx = np.nonzero(over)[0]
-                c2, o2, _ = eng.run(Ls[idx], Us[idx], max_cand=mc)
-                acct.device_calls += 1
-                counts = counts.copy()
-                counts[idx] = c2
-                over = np.zeros_like(over)
-                over[idx] = o2
-                rounds += 1
+            self._stage = "escalate"
+            try:
+                for step in plan.ladder:
+                    if not over.any():
+                        break
+                    mc = min(step.max_cand, cb)
+                    if mc == last:
+                        continue
+                    last = mc
+                    idx = np.nonzero(over)[0]
+                    c2, o2, _ = eng.run(Ls[idx], Us[idx], max_cand=mc)
+                    acct.device_calls += 1
+                    counts = counts.copy()
+                    counts[idx] = c2
+                    over = np.zeros_like(over)
+                    over[idx] = o2
+                    rounds += 1
+            finally:
+                self._stage = "first"
         if over.any() and plan.cpu_fallback:
             counts = counts.copy()
-            for i in np.nonzero(over)[0]:
-                counts[i] = query_count(self.db.index, Ls[i], Us[i]).result
-                fallbacks += 1
+            with obs.span("executor.cpu_net", kind=plan.kind,
+                          engine=eng.name):
+                for i in np.nonzero(over)[0]:
+                    counts[i] = query_count(self.db.index,
+                                            Ls[i], Us[i]).result
+                    fallbacks += 1
             over = np.zeros_like(over)
         return counts, first_over, over, rounds, fallbacks, stats
 
     def _exec_count(self, plan, q, name, eng) -> QueryResult:
         Ls, Us = plan.payload
         if name == "cpu":
-            counts, over, stats = eng.run(Ls, Us)
+            with obs.span("executor.device_call", engine=name,
+                          kind=plan.kind, stage="first"):
+                counts, over, stats = eng.run(Ls, Us)
             plan.accounting.device_calls += 1
             return QueryResult(counts=counts, engine=name,
                                epoch=self.db.store.epoch, stats=stats,
@@ -238,37 +283,46 @@ class Executor:
             cb = eng.overflow_free_cand
             hb = eng.overflow_free_hits
             last = (plan.max_cand, plan.max_hits)
-            for step in plan.ladder:
-                if not over.any():
-                    break
-                mc = min(step.max_cand, cb)
-                mh = min(step.max_hits or plan.max_hits, hb)
-                if (mc, mh) == last:
-                    continue
-                last = (mc, mh)
-                idx = np.nonzero(over)[0]
-                rl2, co2, ho2, _ = eng.run_range(
-                    Ls[idx], Us[idx], max_cand=mc, max_hits=mh)
-                acct.device_calls += 1
-                for j, i in enumerate(idx):
-                    rows_list[i] = rl2[j]
-                co = np.zeros_like(co)
-                ho = np.zeros_like(ho)
-                co[idx] = co2
-                ho[idx] = ho2
-                over = ((co > 0) | (ho > 0)).astype(np.int32)
-                rounds += 1
+            self._stage = "escalate"
+            try:
+                for step in plan.ladder:
+                    if not over.any():
+                        break
+                    mc = min(step.max_cand, cb)
+                    mh = min(step.max_hits or plan.max_hits, hb)
+                    if (mc, mh) == last:
+                        continue
+                    last = (mc, mh)
+                    idx = np.nonzero(over)[0]
+                    rl2, co2, ho2, _ = eng.run_range(
+                        Ls[idx], Us[idx], max_cand=mc, max_hits=mh)
+                    acct.device_calls += 1
+                    for j, i in enumerate(idx):
+                        rows_list[i] = rl2[j]
+                    co = np.zeros_like(co)
+                    ho = np.zeros_like(ho)
+                    co[idx] = co2
+                    ho[idx] = ho2
+                    over = ((co > 0) | (ho > 0)).astype(np.int32)
+                    rounds += 1
+            finally:
+                self._stage = "first"
         if over.any() and plan.cpu_fallback:
-            for i in np.nonzero(over)[0]:
-                rows_list[i] = query_range(self.db.index, Ls[i], Us[i])[0]
-                fallbacks += 1
+            with obs.span("executor.cpu_net", kind=plan.kind,
+                          engine=eng.name):
+                for i in np.nonzero(over)[0]:
+                    rows_list[i] = query_range(self.db.index,
+                                               Ls[i], Us[i])[0]
+                    fallbacks += 1
             over = np.zeros_like(over)
         return rows_list, first_over, over, rounds, fallbacks, stats
 
     def _exec_range(self, plan, q, name, eng) -> RangeResult:
         Ls, Us = plan.payload
         if name == "cpu":
-            rows_list, co, ho, stats = eng.run_range(Ls, Us)
+            with obs.span("executor.device_call", engine=name,
+                          kind=plan.kind, stage="first"):
+                rows_list, co, ho, stats = eng.run_range(Ls, Us)
             plan.accounting.device_calls += 1
             first_over, over, rounds, fallbacks = co, ho, 0, 0
         else:
@@ -289,7 +343,9 @@ class Executor:
         xs, = plan.payload
         epoch = self.db.store.epoch
         if name == "cpu":
-            found = query_point(self.db.index, xs)
+            with obs.span("executor.device_call", engine=name,
+                          kind=plan.kind, stage="first"):
+                found = query_point(self.db.index, xs)
             return PointResult(found=found, engine=name, epoch=epoch,
                                plan=plan)
         # device engines: the whole (Q, d) probe batch is one degenerate
@@ -315,11 +371,13 @@ class Executor:
         if name == "cpu":
             stats = QueryStats()
             parts, dist_parts = [], []
-            for c in centers:
-                rows, dd, st = query_knn(db.index, c, k, metric)
-                parts.append(rows)
-                dist_parts.append(dd)
-                stats.merge(st)
+            with obs.span("executor.device_call", engine=name,
+                          kind=plan.kind, stage="first"):
+                for c in centers:
+                    rows, dd, st = query_knn(db.index, c, k, metric)
+                    parts.append(rows)
+                    dist_parts.append(dd)
+                    stats.merge(st)
             rows, offsets, dd = _concat_rows(parts, db.d, dist_parts)
             return KnnResult(neighbors=rows, offsets=offsets, dists=dd,
                              k=k, metric=metric, engine=name, epoch=epoch,

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
+from ... import obs
 from ...core.serve import bucket_pow2
 from ..engines import engine_capabilities
 from ..queries import Count, Query
@@ -38,7 +39,13 @@ class Step:
 
 @dataclasses.dataclass
 class ExecAccounting:
-    """Per-stage costs recorded on the plan while it executes."""
+    """Per-stage costs recorded on the plan while it executes.
+
+    Accountings are additive: `merge` / ``+=`` sum the counters, which is
+    how the `Router` aggregates its shards' costs onto the merged
+    result's plan (`per_shard` keeps the unsummed breakdown) — sharded
+    runs report every device call and escalation, not just shard 0's.
+    """
 
     compiles: int = 0        # new (compiled fn, input shape) combos traced
     cache_hits: int = 0      # compiled-fn cache hits
@@ -47,6 +54,29 @@ class ExecAccounting:
     escalations: int = 0     # doubled-budget retry rounds that ran
     cpu_fallbacks: int = 0   # queries resolved by the CPU exactness net
     pages_scanned: int = 0   # pages accessed (complete on the CPU engine)
+    per_shard: tuple = None  # aggregated accountings only: the per-shard
+                             #   breakdown this one is the sum of
+
+    _COUNTERS = ("compiles", "cache_hits", "cache_misses", "device_calls",
+                 "escalations", "cpu_fallbacks", "pages_scanned")
+
+    def merge(self, other: "ExecAccounting") -> "ExecAccounting":
+        """Add `other`'s counters into this accounting (in place)."""
+        for f in self._COUNTERS:
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        return self
+
+    def __iadd__(self, other: "ExecAccounting") -> "ExecAccounting":
+        return self.merge(other)
+
+    @classmethod
+    def merged(cls, accts) -> "ExecAccounting":
+        """The sum of `accts`, keeping them as the `per_shard` breakdown."""
+        accts = tuple(accts)
+        out = cls(per_shard=accts)
+        for a in accts:
+            out.merge(a)
+        return out
 
 
 @dataclasses.dataclass
@@ -131,12 +161,18 @@ class Planner:
         ``(Ls, Us)`` bounds mean COUNT, as in `Database.query`).  Validates
         the payload against the index (shape, dimensionality, inverted
         bounds) as a side effect, so a plan that exists is executable."""
-        db = self.db
         if not isinstance(q, Query):
             q = Count(q, U)
         elif U is not None:
             raise ValueError("U= applies only to the legacy (Ls, Us) COUNT "
                              "form, not to typed queries")
+        with obs.span("planner.plan", kind=q.kind) as sp:
+            p = self._plan(q, engine)
+            sp.label(engine=p.engine)
+            return p
+
+    def _plan(self, q: Query, engine: str = None) -> QueryPlan:
+        db = self.db
         kind = q.kind
         requested = engine or db._active or "cpu"
         resolved = self.resolve(kind, engine)

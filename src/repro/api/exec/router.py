@@ -31,11 +31,13 @@ import dataclasses
 
 import numpy as np
 
+from ... import obs
 from ...core.query import QueryStats, knn_select, lex_sorted_rows
 from ...dist.sharding import ShardingRules
 from ..queries import Count, Query
 from ..result import KnnResult, PointResult, QueryResult, RangeResult
 from .executor import _concat_rows
+from .plan import ExecAccounting
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,11 +78,17 @@ class ShardSpec:
 @dataclasses.dataclass
 class RouterPlan:
     """What `Router.explain` returns: the scatter (one structured
-    `QueryPlan` per shard) plus the merge operator applied on gather."""
+    `QueryPlan` per shard) plus the merge operator applied on gather.
+
+    On an *executed* merged result (``result.plan``) `accounting` is the
+    sum over all shards (`ExecAccounting.merged`), with the unsummed
+    per-shard breakdown kept in ``accounting.per_shard`` — sharded runs
+    report every device call and escalation, not just shard 0's."""
 
     kind: str
     merge: str                 # 'sum' | 'lex-stitch' | 'or' | 'rerank'
     shards: list               # per-shard QueryPlan
+    accounting: ExecAccounting = None   # filled on executed plans only
 
     def describe(self) -> str:
         lines = [f"scatter {self.kind.upper()} to {len(self.shards)} "
@@ -144,6 +152,19 @@ class Router:
             s.engine(name, config)
         return self
 
+    def stats(self, *, format: str = "json"):
+        """Current observability snapshot (`repro.obs`): every metric the
+        process recorded — router scatter/merge spans included — as one
+        flat JSON dict (``format="json"``) or in the Prometheus text
+        exposition format (``format="prometheus"``).  Best-effort: empty
+        until `repro.obs.enable()` is called."""
+        if format == "prometheus":
+            return obs.prometheus_text()
+        if format != "json":
+            raise ValueError(f"unknown stats format {format!r}; expected "
+                             f"'json' or 'prometheus'")
+        return obs.snapshot()
+
     # ------------------------------------------------------------------
     def explain(self, q, U=None, *, engine: str = None) -> RouterPlan:
         """The scatter/merge plan: one structured per-shard `QueryPlan`
@@ -166,27 +187,44 @@ class Router:
             raise ValueError("U= applies only to the legacy (Ls, Us) COUNT "
                              "form, not to typed queries")
         q.normalized(d=self.d)             # reject bad payloads pre-scatter
-        parts = [s.query(q, engine=engine) for s in self.shards]
-        merge = {"count": self._merge_count, "range": self._merge_range,
-                 "point": self._merge_point, "knn": self._merge_knn}[q.kind]
-        return merge(q, parts)
+        with obs.span("router.query", kind=q.kind,
+                      shards=len(self.shards)):
+            parts = []
+            for i, s in enumerate(self.shards):
+                with obs.span("router.shard", kind=q.kind, shard=i):
+                    parts.append(s.query(q, engine=engine))
+            merge = {"count": self._merge_count,
+                     "range": self._merge_range,
+                     "point": self._merge_point,
+                     "knn": self._merge_knn}[q.kind]
+            with obs.span("router.merge", kind=q.kind,
+                          op=_MERGE[q.kind]):
+                return merge(q, parts)
 
     # ------------------------------------------------------------------
     # merges
     # ------------------------------------------------------------------
-    def _provenance(self, parts) -> dict:
+    def _provenance(self, q, parts) -> dict:
         stats = QueryStats()
         for r in parts:
             if r.stats is not None:
                 stats.merge(r.stats)
+        # the merged result's plan: scatter structure + the SUM of every
+        # shard's accounting (per_shard keeps the unsummed breakdown)
+        shard_plans = [r.plan for r in parts]
+        plan = RouterPlan(
+            kind=q.kind, merge=_MERGE[q.kind], shards=shard_plans,
+            accounting=ExecAccounting.merged(
+                p.accounting for p in shard_plans if p is not None))
         return dict(
             engine=f"router[{len(parts)}x{parts[0].engine}]",
             epoch=max(r.epoch for r in parts), stats=stats,
             escalations=sum(r.escalations for r in parts),
-            cpu_fallbacks=sum(r.cpu_fallbacks for r in parts))
+            cpu_fallbacks=sum(r.cpu_fallbacks for r in parts),
+            plan=plan)
 
     def _merge_count(self, q, parts) -> QueryResult:
-        prov = self._provenance(parts)
+        prov = self._provenance(q, parts)
         return QueryResult(
             counts=np.sum([r.counts for r in parts], axis=0),
             overflowed=np.sum([r.overflowed for r in parts], axis=0,
@@ -200,7 +238,7 @@ class Router:
             np.concatenate([r.rows_for(i) for r in parts]))
             for i in range(nq)]
         rows, offsets = _concat_rows(merged, self.d)
-        prov = self._provenance(parts)
+        prov = self._provenance(q, parts)
         return RangeResult(
             rows=rows, offsets=offsets,
             overflowed=np.sum([r.overflowed for r in parts], axis=0,
@@ -209,7 +247,7 @@ class Router:
                                      axis=0, dtype=np.int32), **prov)
 
     def _merge_point(self, q, parts) -> PointResult:
-        prov = self._provenance(parts)
+        prov = self._provenance(q, parts)
         found = parts[0].found.copy()
         for r in parts[1:]:
             found |= r.found
@@ -227,7 +265,7 @@ class Router:
             sel_parts.append(sel)
             dist_parts.append(dd)
         rows, offsets, dd = _concat_rows(sel_parts, self.d, dist_parts)
-        prov = self._provenance(parts)
+        prov = self._provenance(q, parts)
         return KnnResult(neighbors=rows, offsets=offsets, dists=dd,
                          k=int(q.k), metric=q.metric, **prov)
 

@@ -34,6 +34,7 @@ import dataclasses
 
 import numpy as np
 
+from ... import obs
 from ..queries import Count, Knn, Point, Query, Range
 from ..result import KnnResult, PointResult, QueryResult, RangeResult
 
@@ -47,6 +48,7 @@ class _Pending:
     payload: tuple            # normalized arrays ((Ls, Us) | (xs,))
     n: int                    # sub-queries this submission contributes
     ticket: "Ticket"
+    t_submit: int = 0         # obs clock at submit (0 while obs disabled)
 
 
 class Ticket:
@@ -114,8 +116,12 @@ class Session:
         ticket = Ticket(self, self._seq, client)
         self._pending.append(_Pending(
             seq=self._seq, client=client, key=key, kind=q.kind,
-            payload=payload, n=len(payload[0]), ticket=ticket))
+            payload=payload, n=len(payload[0]), ticket=ticket,
+            t_submit=obs.clock_ns() if obs.enabled() else 0))
         self._seq += 1
+        if obs.enabled():
+            obs.inc("session.submissions", kind=q.kind)
+            obs.set_gauge("session.pending", len(self._pending))
         return ticket
 
     def __len__(self) -> int:
@@ -134,12 +140,18 @@ class Session:
         try:
             for t0 in range(0, len(pending), tick):
                 window = pending[t0:t0 + tick]
-                groups = {}
-                for p in window:               # insertion order preserved
-                    groups.setdefault(p.key, []).append(p)
-                for key, ps in groups.items():
-                    self._run_group(key, ps)
-                    batches += 1
+                with obs.span("session.tick", fill=len(window)):
+                    if obs.enabled():
+                        # fill factor: how full the coalescing window ran
+                        obs.observe("session.tick_fill", len(window))
+                        obs.set_gauge("session.tick_fill_factor",
+                                      len(window) / tick)
+                    groups = {}
+                    for p in window:           # insertion order preserved
+                        groups.setdefault(p.key, []).append(p)
+                    for key, ps in groups.items():
+                        self._run_group(key, ps)
+                        batches += 1
                 self.ticks_run += 1
         except BaseException:
             unresolved = [p for p in pending if p.ticket._result is None]
@@ -152,6 +164,8 @@ class Session:
     def _run_group(self, key, ps) -> None:
         """Execute one coalesced super-batch and demux per submission."""
         kind = ps[0].kind
+        live = obs.enabled()
+        t_start = obs.clock_ns() if live else 0
         cat = [np.concatenate([p.payload[i] for p in ps])
                for i in range(len(ps[0].payload))]
         if kind == "count":
@@ -162,10 +176,23 @@ class Session:
             q = Point(cat[0])
         else:
             q = Knn(cat[0], k=key[1], metric=key[2])
-        res = self.db.query(q, engine=self.engine)
+        with obs.span("session.group", kind=kind, size=len(ps)):
+            res = self.db.query(q, engine=self.engine)
         starts = np.cumsum([0] + [p.n for p in ps])
         for p, a, b in zip(ps, starts[:-1], starts[1:]):
             p.ticket._result = _slice_result(res, int(a), int(b))
+        if live:
+            t_done = obs.clock_ns()
+            obs.observe("session.coalesce_size", len(ps), kind=kind)
+            for p in ps:
+                # per-ticket latency: queue wait = submit -> group start,
+                # service = submit -> result resolved (both on tickets
+                # submitted while obs was on; 0-stamped ones are skipped)
+                if p.t_submit:
+                    obs.observe("session.queue_wait_ns",
+                                t_start - p.t_submit, kind=kind)
+                    obs.observe("session.service_ns",
+                                t_done - p.t_submit, kind=kind)
 
     def __enter__(self) -> "Session":
         return self

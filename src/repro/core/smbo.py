@@ -19,6 +19,7 @@ import math
 
 import numpy as np
 
+from .. import obs
 from .cost import evaluate_curve
 from .curve import MonotonicCurve, init_curves, random_curve
 from .index import IndexConfig
@@ -81,35 +82,42 @@ def learn_sfc(data: np.ndarray, Ls: np.ndarray, Us: np.ndarray, *,
             seen.add(c)
             init.append(c)
 
-    evaluated = [(c, evaluate(c)) for c in init]
+    with obs.span("smbo.init_design", space=space, n_init=len(init)):
+        evaluated = [(c, evaluate(c)) for c in init]
+    if obs.enabled():
+        obs.inc("smbo.evaluations", len(init), space=space)
     model = RandomForest(seed=seed)
     ybest_idx = int(np.argmin([y for _, y in evaluated]))
     curve_best, y_best = evaluated[ybest_idx]
     history = [(0, y_best)]
 
     for it in range(1, max_iters + 1):
-        X = np.stack([c.features() for c, _ in evaluated])
-        y = np.asarray([v for _, v in evaluated])
-        model.fit(X, y)
+        with obs.span("smbo.iteration", space=space, iteration=it):
+            X = np.stack([c.features() for c, _ in evaluated])
+            y = np.asarray([v for _, v in evaluated])
+            model.fit(X, y)
 
-        # --- line 3: SelectCands via EI over a perturbation pool ---------
-        pool = curve_best.neighbors(rng, n=pool_size // 2, max_swaps=3)
-        pool += [random_curve(rng, d, K, family=space, depth=depth)
-                 for _ in range(pool_size - len(pool))]
-        pool = [c for c in pool if c not in seen] or pool
-        Xp = np.stack([c.features() for c in pool])
-        mu, sigma = model.predict(Xp)
-        ei = expected_improvement(mu, sigma, y_best)
-        top = np.argsort(-ei)[:evals_per_iter]
+            # --- line 3: SelectCands via EI over a perturbation pool -----
+            pool = curve_best.neighbors(rng, n=pool_size // 2, max_swaps=3)
+            pool += [random_curve(rng, d, K, family=space, depth=depth)
+                     for _ in range(pool_size - len(pool))]
+            pool = [c for c in pool if c not in seen] or pool
+            Xp = np.stack([c.features() for c in pool])
+            mu, sigma = model.predict(Xp)
+            ei = expected_improvement(mu, sigma, y_best)
+            top = np.argsort(-ei)[:evals_per_iter]
 
-        # --- line 4: BatchEval -------------------------------------------
-        for j in top:
-            c = pool[int(j)]
-            seen.add(c)
-            yv = evaluate(c)
-            evaluated.append((c, yv))
-            if yv < y_best:
-                y_best, curve_best = yv, c
+            # --- line 4: BatchEval ---------------------------------------
+            for j in top:
+                c = pool[int(j)]
+                seen.add(c)
+                yv = evaluate(c)
+                evaluated.append((c, yv))
+                if yv < y_best:
+                    y_best, curve_best = yv, c
+        if obs.enabled():
+            obs.inc("smbo.evaluations", len(top), space=space)
+            obs.set_gauge("smbo.best_cost", float(y_best), space=space)
         history.append((it, y_best))
         if verbose:
             print(f"[smbo] iter {it}: best cost {y_best:.3f}")

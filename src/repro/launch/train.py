@@ -17,6 +17,7 @@ import time
 import jax
 import numpy as np
 
+from ..obs import log as obs_log
 from ..ckpt.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from ..configs.base import SHAPES, ShapeConfig
 from ..configs.registry import get_arch, reduced_config
@@ -28,8 +29,11 @@ from ..train.steps import make_train_step
 from ..models.transformer import init_model
 from .mesh import make_host_mesh
 
+logger = obs_log.get_logger("launch.train")
+
 
 def main():
+    obs_log.configure()     # stdout, "%(message)s": byte-identical to print
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--steps", type=int, default=20)
@@ -80,7 +84,7 @@ def main():
             args.ckpt_dir + "/opt", start, opt, oshard)
         if "pipeline" in manifest:
             batcher.set_state(manifest["pipeline"])
-        print(f"resumed from step {start}")
+        logger.info("resumed from step %d", start)
 
     sup = Supervisor(n_workers=1)
     it = iter(batcher)
@@ -98,14 +102,15 @@ def main():
         dt = time.time() - t0
         sup.heartbeat(0, dt)
         sup.check()
-        print(f"step {step}: loss={loss:.4f} "
-              f"gnorm={float(metrics['grad_norm']):.3f} {dt*1e3:.0f}ms")
+        logger.info("step %d: loss=%.4f gnorm=%.3f %.0fms",
+                    step, loss, float(metrics["grad_norm"]), dt * 1e3)
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, step + 1, params,
                             extra_meta={"pipeline": pipe_state})
             save_checkpoint(args.ckpt_dir + "/opt", step + 1, opt,
                             extra_meta={"pipeline": pipe_state})
-    print(f"done: {args.steps - start} steps in {time.time()-t_start:.1f}s")
+    logger.info("done: %d steps in %.1fs",
+                args.steps - start, time.time() - t_start)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,49 @@
+"""Structured logging for the repro package — stdlib `logging`, silent by
+default.
+
+Library code logs through ``repro.obs.log.get_logger(__name__)``; the
+root ``"repro"`` logger carries a `NullHandler`, so nothing is emitted
+unless the *application* opts in.  `configure()` is that opt-in: it
+attaches a plain ``%(message)s`` stdout handler (the default formatter),
+under which the output is byte-compatible with the bare ``print(...)``
+calls it replaced in `repro.launch.train`.
+"""
+from __future__ import annotations
+
+import logging
+import sys
+
+ROOT = "repro"
+
+# library default: never emit unless the application configures a handler
+logging.getLogger(ROOT).addHandler(logging.NullHandler())
+
+
+def get_logger(name: str = None) -> logging.Logger:
+    """A logger under the ``repro`` hierarchy (``repro.<name>``, or the
+    root ``repro`` logger when `name` is None).  Dotted module names that
+    already start with ``repro`` are used as-is."""
+    if not name:
+        return logging.getLogger(ROOT)
+    if name == ROOT or name.startswith(ROOT + "."):
+        return logging.getLogger(name)
+    return logging.getLogger(ROOT + "." + name)
+
+
+def configure(level: int = logging.INFO, stream=None,
+              fmt: str = "%(message)s") -> logging.Logger:
+    """Attach a stream handler to the ``repro`` root (idempotent — the
+    previous `configure` handler is replaced, not stacked).  The default
+    ``%(message)s`` formatter reproduces the old ``print`` output
+    byte-for-byte."""
+    root = logging.getLogger(ROOT)
+    for h in list(root.handlers):
+        if getattr(h, "_repro_obs_configured", False):
+            root.removeHandler(h)
+    handler = logging.StreamHandler(stream if stream is not None
+                                    else sys.stdout)
+    handler.setFormatter(logging.Formatter(fmt))
+    handler._repro_obs_configured = True
+    root.addHandler(handler)
+    root.setLevel(level)
+    return root

@@ -453,3 +453,116 @@ def test_shard_spec_reuses_dist_sharding_rules():
         ShardSpec(0)
     with pytest.raises(ValueError, match="at least one shard"):
         Router([])
+
+
+# ---------------------------------------------------------------------------
+# counter coverage (satellite): CacheStats / ExecAccounting tell the truth
+# ---------------------------------------------------------------------------
+
+
+def test_cache_stats_snapshot_is_isolated():
+    """`CacheStats.snapshot()` is a frozen copy: later traffic must not
+    mutate it (the bench relies on before/after deltas)."""
+    db, data, (Ls, Us) = _db(q_chunk=8, max_cand=64)
+    db.query(Count(Ls, Us))
+    snap = db.executor.cache.snapshot()
+    before = (snap.hits, snap.misses, snap.compiles, snap.calls,
+              snap.evictions)
+    db.query(Count(Ls, Us))                       # warm traffic mutates live
+    assert db.executor.cache.hits > snap.hits     # ... the live counters
+    assert (snap.hits, snap.misses, snap.compiles, snap.calls,
+            snap.evictions) == before             # ... never the snapshot
+
+
+def test_eviction_counter_on_invalidate_reattach_and_cap_growth():
+    """Every eviction path increments `CacheStats.evictions` by exactly the
+    number of dropped fns: engine re-attach, rebuild invalidation, and the
+    delta-capacity-growth repack (which must drop fns traced at the old
+    static cap)."""
+    from repro.api.deltas import rows_in_set
+
+    db, data, (Ls, Us) = _db(n=1500, n_q=8, page_bytes=2048,
+                             q_chunk=8, max_cand=64)
+    db.query(Count(Ls, Us))
+    live = db.executor.cache_size(db.engines["xla"])
+    assert live > 0 and db.executor.cache.evictions == 0
+    # re-attach: exactly the old engine's fns are evicted
+    db.engine("xla", EngineConfig(q_chunk=8, max_cand=64))
+    assert db.executor.cache.evictions == live
+    db.query(Count(Ls, Us))
+    # rebuild invalidation: same bookkeeping through Engine.invalidate
+    ev0 = db.executor.cache.evictions
+    live = db.executor.cache_size(db.engines["xla"])
+    db.rebuild()
+    assert db.executor.cache.evictions == ev0 + live
+    # cap growth: enough near-duplicate inserts into one page overflow the
+    # packed point capacity; the repack grows the (static) cap and must
+    # evict the fns traced at the old one
+    db.engine("xla", EngineConfig(q_chunk=8, max_cand=db.num_pages))
+    db.query(Count(Ls, Us))
+    cap0 = db.engines["xla"]._host.points.shape[2]
+    base = data[100].astype(np.int64)
+    K = db.index.K
+    new = np.unique(np.stack([
+        np.clip(base + [dx, 0], 0, 2 ** K - 1).astype(np.uint64)
+        for dx in range(1, cap0 + 16)]), axis=0)
+    new = new[~rows_in_set(new, data)]
+    db.insert(new)
+    ev0 = db.executor.cache.evictions
+    live = db.executor.cache_size(db.engines["xla"])
+    assert live > 0
+    res = db.query(Count(Ls, Us), engine="xla")   # auto-refresh grows cap
+    assert db.engines["xla"]._host.points.shape[2] > cap0
+    assert res.exact
+    assert db.executor.cache.evictions >= ev0 + live
+
+
+def test_accounting_reflects_actual_escalation_path():
+    """`ExecAccounting` on the executed plan mirrors what really happened:
+    a budget that forces the whole ladder books one device call per rung
+    taken plus the first pass, and escalations match the result's."""
+    db, data, (Ls, Us) = _db(q_chunk=8, max_cand=1)
+    res = db.query(Count(Ls, Us))
+    acct = res.plan.accounting
+    assert res.exact and res.escalations > 0
+    assert acct.escalations == res.escalations
+    assert acct.device_calls == 1 + acct.escalations  # first pass + rungs
+    assert acct.cpu_fallbacks == res.cpu_fallbacks
+    # an overflow-free budget takes zero rungs: exactly one device call
+    db.engine("xla", EngineConfig(q_chunk=8, max_cand=db.num_pages))
+    res2 = db.query(Count(Ls, Us))
+    acct2 = res2.plan.accounting
+    assert res2.escalations == 0 and acct2.escalations == 0
+    assert acct2.device_calls == 1
+
+
+def test_exec_accounting_merge_and_router_per_shard_breakdown():
+    """Satellite: accountings are additive (`merge` / `+=`), and a Router
+    merged result's plan aggregates ALL shards' costs with the unsummed
+    `per_shard` breakdown attached — not just shard 0's numbers."""
+    from repro.api.exec.plan import ExecAccounting
+
+    a = ExecAccounting(device_calls=2, escalations=1, pages_scanned=10)
+    b = ExecAccounting(device_calls=3, cache_hits=4, pages_scanned=5)
+    a += b
+    assert (a.device_calls, a.escalations, a.cache_hits,
+            a.pages_scanned) == (5, 1, 4, 15)
+    m = ExecAccounting.merged([ExecAccounting(device_calls=2),
+                               ExecAccounting(device_calls=3)])
+    assert m.device_calls == 5 and len(m.per_shard) == 2
+
+    data = make_dataset("osm", 1200, seed=3)
+    K = default_K(2)
+    Ls, Us = make_workload(data, 6, seed=4, K=K)
+    router = Router.build(data, 3, learn=False,
+                          cfg=IndexConfig(paging="heuristic",
+                                          page_bytes=1024))
+    router.engine("xla", EngineConfig(q_chunk=8, max_cand=16, max_hits=128))
+    res = router.query(Count(Ls, Us))
+    acct = res.plan.accounting
+    assert res.plan.kind == "count" and res.plan.merge == "sum"
+    assert len(acct.per_shard) == 3
+    for f in ExecAccounting._COUNTERS:
+        assert getattr(acct, f) == sum(getattr(s, f)
+                                       for s in acct.per_shard), f
+    assert acct.device_calls >= 3          # every shard really ran
