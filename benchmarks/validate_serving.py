@@ -1,0 +1,114 @@
+"""Schema gate for the serving benchmark artifact (CI ``serving-smoke``).
+
+Validates BENCH_serving.json: envelope, a >= 5-point latency/throughput
+curve with a strictly increasing offered-load axis and monotone
+p50 <= p95 <= p99 per point, a knee consistent with its stated
+criterion, a controller section whose adaptive run beats the fixed
+window and holds the p99 target with every trajectory sample inside the
+configured window bounds, and a passing bit-identical exactness gate —
+so a serving regression (latency blowup, controller oscillating out of
+bounds, served results drifting from serial) fails the push, not a
+later debugging session.
+
+    PYTHONPATH=src python benchmarks/validate_serving.py \
+        [--report BENCH_serving.json] [--min-points 5]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+REQUIRED_KEYS = ("schema", "host", "jax_version", "config", "sweep",
+                 "knee", "controller", "exactness")
+POINT_KEYS = ("offered_qps", "sustained_qps", "scheduled", "completed",
+              "shed", "failed", "p50_ms", "p95_ms", "p99_ms",
+              "window_final_ms")
+
+
+def validate_sweep(doc: dict, min_points: int) -> None:
+    sweep = doc["sweep"]
+    assert len(sweep) >= min_points, (
+        f"need >= {min_points} offered-load points, got {len(sweep)}")
+    offered = [pt["offered_qps"] for pt in sweep]
+    assert offered == sorted(offered) and len(set(offered)) == len(offered), (
+        f"offered-load axis must be strictly increasing: {offered}")
+    for pt in sweep:
+        missing = [k for k in POINT_KEYS if k not in pt]
+        assert not missing, f"sweep point missing keys: {missing}"
+        assert pt["completed"] > 0, f"no completions at {pt['offered_qps']}"
+        assert pt["sustained_qps"] > 0, (
+            f"degenerate sustained rate at {pt['offered_qps']} q/s offered")
+        assert pt["p50_ms"] <= pt["p95_ms"] <= pt["p99_ms"], (
+            f"non-monotone quantiles at {pt['offered_qps']} q/s: "
+            f"p50={pt['p50_ms']} p95={pt['p95_ms']} p99={pt['p99_ms']}")
+        assert pt["completed"] + pt["shed"] + pt["failed"] <= \
+            pt["scheduled"], (
+            f"accounting leak at {pt['offered_qps']} q/s: completed + shed "
+            f"+ failed > scheduled")
+
+    knee = doc["knee"]
+    assert any(pt["offered_qps"] == knee["offered_qps"] for pt in sweep), (
+        f"knee offered load {knee['offered_qps']} not on the sweep axis")
+
+
+def validate_controller(doc: dict) -> None:
+    ctl = doc["controller"]
+    lo, hi = ctl["window_min_ms"], ctl["window_max_ms"]
+    assert 0 <= lo < hi, f"bad window bounds [{lo}, {hi}]"
+
+    comp = ctl["comparison"]
+    assert comp["adaptive_p99_ms"] <= comp["fixed_p99_ms"], (
+        f"adaptive p99 {comp['adaptive_p99_ms']} ms worse than the fixed "
+        f"window's {comp['fixed_p99_ms']} ms")
+    assert comp["holds_target"] is True, "controller did not hold the target"
+    assert comp["adaptive_p99_ms"] <= ctl["target_p99_ms"], (
+        f"adaptive p99 {comp['adaptive_p99_ms']} ms misses the "
+        f"{ctl['target_p99_ms']} ms target")
+    assert comp["fixed_p99_ms"] > ctl["target_p99_ms"], (
+        f"fixed window held the target too ({comp['fixed_p99_ms']} ms) — "
+        f"the comparison load is too light to demonstrate the controller")
+
+    traj = ctl["trajectory"]
+    assert traj, "empty controller trajectory"
+    for step, window_ms, p99_ms in traj:
+        assert lo <= window_ms <= hi, (
+            f"trajectory step {step}: window {window_ms} ms outside "
+            f"[{lo}, {hi}]")
+
+    # every sweep point's final window must also respect the bounds
+    for pt in doc["sweep"]:
+        assert lo <= pt["window_final_ms"] <= hi, (
+            f"final window {pt['window_final_ms']} ms at "
+            f"{pt['offered_qps']} q/s outside [{lo}, {hi}]")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default="BENCH_serving.json")
+    ap.add_argument("--min-points", type=int, default=5)
+    args = ap.parse_args()
+
+    with open(args.report) as f:
+        doc = json.load(f)
+    missing = [k for k in REQUIRED_KEYS if k not in doc]
+    assert not missing, f"{args.report} missing keys: {missing}"
+    assert doc["schema"] == 1, f"unknown schema {doc['schema']!r}"
+
+    validate_sweep(doc, args.min_points)
+    validate_controller(doc)
+
+    ex = doc["exactness"]
+    assert ex["bit_identical"] is True and ex["results_checked"] > 0, (
+        f"exactness gate not demonstrated: {ex}")
+
+    comp = doc["controller"]["comparison"]
+    print(f"{args.report}: {len(doc['sweep'])}-point curve ok "
+          f"(knee {doc['knee']['sustained_qps']:.0f} q/s); controller "
+          f"holds {doc['controller']['target_p99_ms']:.0f} ms p99 "
+          f"(adaptive {comp['adaptive_p99_ms']:.1f} ms vs fixed "
+          f"{comp['fixed_p99_ms']:.1f} ms); {ex['results_checked']} "
+          f"results bit-identical to serial ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,7 +23,8 @@ from .deltas import DeltaStore, get_delta_store
 from .engines import (BaseEngine, StaleServingError, engine_capabilities,
                       engine_names, make_engine, register_engine)
 from .exec import (CacheStats, ExecAccounting, Executor, Planner, QueryPlan,
-                   Router, RouterPlan, Session, ShardSpec, Step, Ticket)
+                   Router, RouterPlan, ServingTimeout, Session, ShardSpec,
+                   Step, Ticket)
 from .policy import FractionRebuildPolicy, NeverRebuild, RebuildPolicy
 from .queries import Count, Knn, Point, Query, Range
 from .result import (EngineConfig, KnnResult, PointResult, QueryResult,
@@ -41,6 +42,6 @@ __all__ = [
     "KnnResult",
     "QueryPlan", "Planner", "Step", "ExecAccounting",
     "Executor", "CacheStats",
-    "Session", "Ticket",
+    "Session", "ServingTimeout", "Ticket",
     "Router", "RouterPlan", "ShardSpec",
 ]

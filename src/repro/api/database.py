@@ -244,6 +244,18 @@ class Database:
         (deterministic — bit-identical to serial execution)."""
         return Session(self, engine=engine, tick=tick)
 
+    def serve(self, *, slo=None, engine: str = None):
+        """An async serving front (`repro.serving.AsyncServer`) over this
+        database: thread-safe non-blocking ``submit(query)`` returning
+        futures, a background drain loop coalescing submissions into
+        engine super-batches through the Session/Executor path, SLO-driven
+        adaptive batching, admission control, and weighted-fair per-kind
+        dequeue.  `slo` is a `repro.serving.SLOConfig` (p99 target, queue
+        bound, overload policy); results stay bit-identical to serial
+        `query` calls.  Close it (or use ``with``) to drain and stop."""
+        from ..serving.server import AsyncServer   # lazy: serving imports api
+        return AsyncServer(self, slo=slo, engine=engine)
+
     # ------------------------------------------------------------------
     # updates (LMSFCb deltas + LMSFCa rebuild)
     # ------------------------------------------------------------------

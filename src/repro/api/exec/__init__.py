@@ -17,11 +17,11 @@ Session micro-batcher, and the multi-shard Router.
 from .executor import CacheStats, Executor
 from .plan import ExecAccounting, Planner, QueryPlan, Step
 from .router import Router, RouterPlan, ShardSpec
-from .session import Session, Ticket
+from .session import ServingTimeout, Session, Ticket
 
 __all__ = [
     "CacheStats", "Executor",
     "ExecAccounting", "Planner", "QueryPlan", "Step",
     "Router", "RouterPlan", "ShardSpec",
-    "Session", "Ticket",
+    "ServingTimeout", "Session", "Ticket",
 ]

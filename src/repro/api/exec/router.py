@@ -152,6 +152,20 @@ class Router:
             s.engine(name, config)
         return self
 
+    def session(self, *, engine: str = None, tick: int = None):
+        """A micro-batching `Session` over the whole router: coalesced
+        super-batches scatter to every shard and merge exactly, so
+        results stay bit-identical to serial `Router.query` calls."""
+        from .session import Session       # local: session is kind-agnostic
+        return Session(self, engine=engine, tick=tick)
+
+    def serve(self, *, slo=None, engine: str = None):
+        """An async serving front (`repro.serving.AsyncServer`) over the
+        sharded dataset — same contract as `Database.serve`, with every
+        super-batch scattered/merged across the shards."""
+        from ...serving.server import AsyncServer  # lazy: serving imports api
+        return AsyncServer(self, slo=slo, engine=engine)
+
     def stats(self, *, format: str = "json"):
         """Current observability snapshot (`repro.obs`): every metric the
         process recorded — router scatter/merge spans included — as one

@@ -19,6 +19,12 @@ Guarantees:
   at `submit`, so a mixed-dimension or inverted-rect submission raises
   `ValueError` immediately, not at device execution inside a coalesced
   batch of other clients' queries.
+* **Thread safety** — `submit`, `flush`, `discard`, and `len()` may be
+  called from concurrent threads: submission order (the demux key) is
+  allocated under a lock, and a flush drains an atomic snapshot of the
+  queue while later submissions keep accumulating.  This is the
+  substrate the async serving front (`repro.serving.AsyncServer`)
+  drives, but it holds as a standalone Session guarantee.
 
 Quickstart::
 
@@ -31,12 +37,21 @@ Quickstart::
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import numpy as np
 
 from ... import obs
 from ..queries import Count, Knn, Point, Query, Range
 from ..result import KnnResult, PointResult, QueryResult, RangeResult
+
+
+class ServingTimeout(TimeoutError):
+    """A ticket was not resolved in time: `Ticket.result(timeout=...)`
+    gave up waiting, or a ticket is still unresolved after its session
+    flushed (e.g. it was `Session.discard`ed, or another thread's flush
+    holds it).  Also raised by the serving front's futures
+    (`repro.serving.ServerTicket.result`)."""
 
 
 @dataclasses.dataclass
@@ -56,27 +71,41 @@ class Ticket:
     submission is still pending and returns the per-submission result
     (the kind's usual result type, sliced out of its super-batch)."""
 
-    __slots__ = ("_session", "seq", "client", "_result")
+    __slots__ = ("_session", "seq", "client", "_result", "_event")
 
     def __init__(self, session, seq, client):
         self._session = session
         self.seq = seq
         self.client = client
         self._result = None
+        self._event = threading.Event()
 
-    @property
+    def _resolve(self, res) -> None:
+        self._result = res
+        self._event.set()
+
     def done(self) -> bool:
+        """Non-blocking: has this submission been resolved?"""
         return self._result is not None
 
-    def result(self):
+    def result(self, timeout: float = None):
+        """The per-submission result, flushing the session if this
+        submission is still pending.  When another thread owns the flush
+        (the async serving drain loop, or a concurrent caller), waits up
+        to `timeout` seconds for it to resolve the ticket; raises
+        `ServingTimeout` if it is still unresolved after that."""
         if self._result is None:
             self._session.flush()
+        if self._result is None and timeout is not None:
+            self._event.wait(timeout)
         if self._result is None:
-            raise RuntimeError(f"ticket {self.seq} unresolved after flush")
+            raise ServingTimeout(
+                f"ticket {self.seq} unresolved after flush" +
+                (f" and a {timeout}s wait" if timeout is not None else ""))
         return self._result
 
     def __repr__(self):
-        state = "done" if self.done else "pending"
+        state = "done" if self.done() else "pending"
         return f"Ticket(seq={self.seq}, client={self.client!r}, {state})"
 
 
@@ -97,8 +126,11 @@ class Session:
         self.tick = tick
         self._pending = []
         self._seq = 0
+        self._lock = threading.RLock()   # guards _pending/_seq (submission
+                                         # order is the demux contract)
         self.ticks_run = 0
         self.batches_run = 0
+        self.flush_failures = 0          # flushes that raised and requeued
 
     # ------------------------------------------------------------------
     def submit(self, q: Query, *, client: str = None) -> Ticket:
@@ -113,19 +145,22 @@ class Session:
         if not isinstance(payload, tuple):
             payload = (payload,)
         key = q.coalesce_key()
-        ticket = Ticket(self, self._seq, client)
-        self._pending.append(_Pending(
-            seq=self._seq, client=client, key=key, kind=q.kind,
-            payload=payload, n=len(payload[0]), ticket=ticket,
-            t_submit=obs.clock_ns() if obs.enabled() else 0))
-        self._seq += 1
+        with self._lock:
+            ticket = Ticket(self, self._seq, client)
+            self._pending.append(_Pending(
+                seq=self._seq, client=client, key=key, kind=q.kind,
+                payload=payload, n=len(payload[0]), ticket=ticket,
+                t_submit=obs.clock_ns() if obs.enabled() else 0))
+            self._seq += 1
+            n_pending = len(self._pending)
         if obs.enabled():
             obs.inc("session.submissions", kind=q.kind)
-            obs.set_gauge("session.pending", len(self._pending))
+            obs.set_gauge("session.pending", n_pending)
         return ticket
 
     def __len__(self) -> int:
-        return len(self._pending)
+        with self._lock:
+            return len(self._pending)
 
     # ------------------------------------------------------------------
     def flush(self) -> int:
@@ -133,8 +168,14 @@ class Session:
         Returns the number of engine super-batches executed.  If a batch
         raises, every not-yet-resolved submission is put back on the
         pending queue (submission order kept) before the exception
-        propagates, so a failed flush can be retried."""
-        pending, self._pending = self._pending, []
+        propagates, so a failed flush can be retried.
+
+        Thread-safe: drains an atomic snapshot of the queue; submissions
+        arriving while the snapshot executes stay pending for the next
+        flush (and on failure the requeued submissions go back in front
+        of them, preserving submission order)."""
+        with self._lock:
+            pending, self._pending = self._pending, []
         batches = 0
         tick = self.tick or max(1, len(pending))
         try:
@@ -154,12 +195,29 @@ class Session:
                         batches += 1
                 self.ticks_run += 1
         except BaseException:
-            unresolved = [p for p in pending if p.ticket._result is None]
-            self._pending = unresolved + self._pending
+            unresolved = [p for p in pending if not p.ticket.done()]
+            with self._lock:
+                self._pending = unresolved + self._pending
+                self.flush_failures += 1
+            if obs.enabled():
+                obs.inc("session.requeues", len(unresolved))
             raise
         finally:
             self.batches_run += batches
         return batches
+
+    def discard(self, tickets) -> int:
+        """Drop the given tickets' submissions from the pending queue
+        without executing them (they stay unresolved — `result()` on one
+        raises `ServingTimeout`).  The serving front uses this to shed a
+        batch whose flush kept failing past its retry budget; returns how
+        many submissions were actually removed."""
+        dead = {id(t) for t in tickets}
+        with self._lock:
+            before = len(self._pending)
+            self._pending = [p for p in self._pending
+                             if id(p.ticket) not in dead]
+            return before - len(self._pending)
 
     def _run_group(self, key, ps) -> None:
         """Execute one coalesced super-batch and demux per submission."""
@@ -180,7 +238,7 @@ class Session:
             res = self.db.query(q, engine=self.engine)
         starts = np.cumsum([0] + [p.n for p in ps])
         for p, a, b in zip(ps, starts[:-1], starts[1:]):
-            p.ticket._result = _slice_result(res, int(a), int(b))
+            p.ticket._resolve(_slice_result(res, int(a), int(b)))
         if live:
             t_done = obs.clock_ns()
             obs.observe("session.coalesce_size", len(ps), kind=kind)
@@ -202,7 +260,7 @@ class Session:
             self.flush()
 
     def __repr__(self):
-        return (f"Session(pending={len(self._pending)}, "
+        return (f"Session(pending={len(self)}, "
                 f"engine={self.engine!r}, tick={self.tick}, "
                 f"batches_run={self.batches_run})")
 

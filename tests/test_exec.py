@@ -262,7 +262,7 @@ def test_session_bit_identical_to_serial_any_tick(engine):
         for i, (t, want) in enumerate(zip(tickets, serial)):
             _assert_same_result(t.result(), want,
                                 ctx=f"{engine} tick={tick} sub#{i}")
-        assert all(t.done for t in tickets)
+        assert all(t.done() for t in tickets)
 
 
 def test_session_coalesces_compatible_kinds():
@@ -311,7 +311,7 @@ def test_session_flush_failure_requeues_unresolved_submissions():
     try:
         with pytest.raises(RuntimeError, match="transient"):
             s.flush()
-        assert t1.done and not t2.done and not t3.done
+        assert t1.done() and not t2.done() and not t3.done()
         assert len(s) == 2                   # requeued, not dropped
         s.flush()                            # retry succeeds
     finally:

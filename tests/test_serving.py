@@ -1,0 +1,454 @@
+"""repro.serving: SLO policy, adaptive controller, weighted-fair queue,
+the async server's exactness/overload/failure contracts, and the
+open-loop load harness."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.api import Count, Database, Knn, Point, Range, Router
+from repro.api.exec.session import ServingTimeout
+from repro.core.index import IndexConfig
+from repro.core.theta import default_K
+from repro.data.synth import make_dataset
+from repro.data.workload import make_workload
+from repro.serving import (AsyncServer, LoadSpec, ServerOverloaded,
+                           SLOConfig, WeightedFairQueue, make_query_log,
+                           quantiles_ms, replay_serial, run_open_loop)
+from repro.serving.server import assert_bit_identical
+from repro.serving.slo import AdaptiveController
+
+
+@pytest.fixture(scope="module")
+def db():
+    data = make_dataset("osm", 2000, seed=0)
+    K = default_K(2)
+    Ls, Us = make_workload(data, 10, seed=1, K=K)
+    d = Database.fit(data, (Ls, Us), K=K, learn=False,
+                     cfg=IndexConfig(paging="heuristic", page_bytes=1024))
+    return d, data, (Ls, Us)
+
+
+def _mixed_queries(data, Ls, Us, n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    qs = []
+    for i in range(n):
+        j = int(rng.integers(0, len(Ls)))
+        kind = i % 4
+        if kind == 0:
+            qs.append(Count(Ls[j:j + 1], Us[j:j + 1]))
+        elif kind == 1:
+            qs.append(Range(Ls[j:j + 1], Us[j:j + 1]))
+        elif kind == 2:
+            qs.append(Point(data[j:j + 1]))
+        else:
+            qs.append(Knn(data[j:j + 1], k=3, metric="l2"))
+    return qs
+
+
+# ---------------------------------------------------------------------------
+# SLOConfig + AdaptiveController
+# ---------------------------------------------------------------------------
+
+
+def test_slo_config_validates_and_fills_weights():
+    slo = SLOConfig(weights={"range": 2.0})
+    assert slo.weights["range"] == 2.0 and slo.weights["count"] == 4.0
+    for kw in ({"p99_target_ms": 0}, {"max_queue": 0},
+               {"overload": "drop"}, {"batch_max": 0},
+               {"window_init_ms": 99.0, "window_max_ms": 50.0},
+               {"shrink": 1.0}, {"grow_ms": -1.0}, {"headroom": 0.0},
+               {"min_samples": 0}, {"sample_window": 4, "min_samples": 8},
+               {"weights": {"count": 0.0}}):
+        with pytest.raises(ValueError):
+            SLOConfig(**kw)
+
+
+def test_controller_aimd_grow_shrink_deadzone_and_clamp():
+    slo = SLOConfig(p99_target_ms=10.0, window_init_ms=2.0,
+                    window_min_ms=1.0, window_max_ms=4.0, grow_ms=1.0,
+                    shrink=0.5, headroom=0.5, min_samples=4,
+                    sample_window=64)
+    c = AdaptiveController(slo)
+    c.update()                               # below min_samples: holds
+    assert c.window_ms == 2.0 and c.grows == c.shrinks == 0
+
+    c.observe([1.0, 1.0, 1.0, 1.0])          # p99 ~1ms < 0.5*10 -> grow
+    for _ in range(5):
+        c.update()
+    assert c.window_ms == 4.0 and c.grows == 5   # additive, clamped at max
+
+    c.observe([50.0] * 64)                   # p99 >> target -> shrink
+    c.update()
+    assert c.window_ms == 2.0 and c.shrinks == 1
+    for _ in range(4):
+        c.update()
+    assert c.window_ms == 1.0               # multiplicative, clamped at min
+
+    c2 = AdaptiveController(slo)
+    c2.observe([7.0] * 16)                  # 0.5*10 <= p99 <= 10: dead zone
+    c2.update()
+    assert c2.window_ms == 2.0 and c2.grows == 0 and c2.shrinks == 0
+    assert c2.trajectory[-1][1] == 2.0
+
+
+def test_controller_adaptive_false_pins_window():
+    slo = SLOConfig(adaptive=False, window_init_ms=5.0, window_max_ms=50.0,
+                    min_samples=1)
+    c = AdaptiveController(slo)
+    c.observe([1000.0] * 8)
+    for _ in range(10):
+        c.update()
+    assert c.window_ms == 5.0 and c.grows == 0 and c.shrinks == 0
+
+
+# ---------------------------------------------------------------------------
+# WeightedFairQueue
+# ---------------------------------------------------------------------------
+
+
+def test_wfq_weighted_interleave_fifo_and_bound():
+    q = WeightedFairQueue({"count": 4.0, "range": 1.0}, max_depth=16)
+    for i in range(8):
+        assert q.push("count", ("count", i))
+    for i in range(8):
+        assert q.push("range", ("range", i))
+    assert not q.push("count", "overflow") and q.depth == 16  # bounded
+
+    order = q.pop_batch(16)
+    assert q.depth == 0 and q.pop() is None
+    # stride scheduling: ~4 counts per range while both are backlogged
+    first8 = [k for k, _ in order[:8]]
+    assert first8.count("count") >= 6       # high-weight kind dominates
+    assert [k for k, _ in order].count("range") == 8    # nothing starved
+    for kind in ("count", "range"):         # FIFO within each kind
+        seq = [i for k, i in order if k == kind]
+        assert seq == sorted(seq)
+
+
+def test_wfq_idle_kind_banks_no_credit():
+    q = WeightedFairQueue({"count": 1.0, "range": 1.0}, max_depth=64)
+    for i in range(8):
+        q.push("count", i)
+    q.pop_batch(8)                          # count's virtual clock advances
+    q.push("range", "late")                 # idle kind joins at current vt
+    q.push("count", 99)
+    # range joined "now": it must not burst ahead of count's next item by
+    # a whole idle period, but it is next by the (pass, kind) tie-break
+    assert q.pop() == "late" and q.pop() == 99
+
+
+# ---------------------------------------------------------------------------
+# AsyncServer: exactness, admission control, failure paths
+# ---------------------------------------------------------------------------
+
+
+def test_server_results_bit_identical_to_serial(db):
+    d, data, (Ls, Us) = db
+    qs = _mixed_queries(data, Ls, Us, n=24)
+    with d.serve(slo=SLOConfig(window_init_ms=1.0), engine="cpu") as srv:
+        tickets = [srv.submit(q, client=f"c{i % 5}")
+                   for i, q in enumerate(qs)]
+        results = [t.result(timeout=30) for t in tickets]
+    assert [t.seq for t in tickets] == list(range(24))  # admission order
+    oracle = replay_serial(d, srv.query_log(), engine="cpu")
+    for t, res in zip(tickets, results):
+        assert_bit_identical(res, oracle[t.seq], context=f"seq{t.seq}")
+    st = srv.stats()
+    assert st["served"] == 24 and st["failed"] == 0 and st["shed"] == 0
+
+
+def test_server_concurrent_submitters_all_exact(db):
+    d, data, (Ls, Us) = db
+    per_thread = 6
+    tickets = {}
+
+    def client(name):
+        qs = _mixed_queries(data, Ls, Us, n=per_thread,
+                            seed=hash(name) % 1000)
+        tickets[name] = [(q, srv.submit(q, client=name)) for q in qs]
+
+    with d.serve(slo=SLOConfig(window_init_ms=2.0), engine="cpu") as srv:
+        threads = [threading.Thread(target=client, args=(f"t{i}",))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        all_pairs = [p for pairs in tickets.values() for p in pairs]
+        resolved = [(q, t, t.result(timeout=30)) for q, t in all_pairs]
+    seqs = sorted(t.seq for _, t, _ in resolved)
+    assert seqs == list(range(8 * per_thread))          # no seq collisions
+    for q, t, res in resolved:
+        assert_bit_identical(res, d.query(q, engine="cpu"),
+                             context=f"seq{t.seq}")
+
+
+def test_server_reject_policy_sheds_under_overload(db):
+    d, data, (Ls, Us) = db
+    orig = d.query
+
+    def slow(q, U=None, **kw):
+        time.sleep(0.05)
+        return orig(q, U, **kw)
+
+    d.query = slow
+    try:
+        slo = SLOConfig(max_queue=2, batch_max=1, overload="reject",
+                        window_init_ms=0.0, window_max_ms=1.0,
+                        adaptive=False)
+        with AsyncServer(d, slo=slo, engine="cpu") as srv:
+            admitted, shed = [], 0
+            for i in range(12):
+                try:
+                    admitted.append(srv.submit(Count(Ls[:1], Us[:1])))
+                except ServerOverloaded:
+                    shed += 1
+            results = [t.result(timeout=30) for t in admitted]
+        assert shed > 0 and srv.stats()["shed"] == shed
+        assert len(results) == len(admitted) == 12 - shed
+    finally:
+        d.query = orig
+
+
+def test_server_block_policy_applies_backpressure(db):
+    d, data, (Ls, Us) = db
+    orig = d.query
+
+    def slow(q, U=None, **kw):
+        time.sleep(0.02)
+        return orig(q, U, **kw)
+
+    d.query = slow
+    try:
+        slo = SLOConfig(max_queue=1, batch_max=1, overload="block",
+                        window_init_ms=0.0, window_max_ms=1.0,
+                        adaptive=False)
+        with AsyncServer(d, slo=slo, engine="cpu") as srv:
+            tickets = [srv.submit(Count(Ls[:1], Us[:1])) for _ in range(6)]
+            results = [t.result(timeout=30) for t in tickets]
+        st = srv.stats()
+        assert st["shed"] == 0 and st["served"] == 6 and len(results) == 6
+    finally:
+        d.query = orig
+
+
+def test_server_ticket_done_and_timeout(db):
+    d, data, (Ls, Us) = db
+    release = threading.Event()
+    orig = d.query
+
+    def gated(q, U=None, **kw):
+        release.wait(timeout=30)
+        return orig(q, U, **kw)
+
+    d.query = gated
+    try:
+        with AsyncServer(d, slo=SLOConfig(window_init_ms=0.0),
+                         engine="cpu") as srv:
+            t = srv.submit(Count(Ls[:1], Us[:1]))
+            assert not t.done() and t.latency_s() is None
+            with pytest.raises(ServingTimeout, match="unresolved"):
+                t.result(timeout=0.05)
+            release.set()
+            res = t.result(timeout=30)
+        assert t.done() and t.latency_s() > 0
+        np.testing.assert_array_equal(
+            res.counts, d.query(Count(Ls[:1], Us[:1]), engine="cpu").counts)
+    finally:
+        d.query = orig
+
+
+def test_server_failed_batch_rejects_tickets_after_retry_budget(db):
+    d, data, (Ls, Us) = db
+    orig = d.query
+
+    def broken(q, U=None, **kw):
+        raise RuntimeError("engine down")
+
+    d.query = broken
+    try:
+        slo = SLOConfig(window_init_ms=0.0, max_retries=1)
+        with AsyncServer(d, slo=slo, engine="cpu") as srv:
+            t = srv.submit(Count(Ls[:1], Us[:1]))
+            with pytest.raises(RuntimeError, match="engine down"):
+                t.result(timeout=30)
+        st = srv.stats()
+        assert st["failed"] == 1 and st["served"] == 0
+        assert st["retries"] == slo.max_retries + 1     # every flush try
+        assert len(srv._session) == 0       # stragglers discarded, not
+    finally:                                # haunting the next batch
+        d.query = orig
+
+
+def test_server_rejects_bad_submissions_in_caller_thread(db):
+    d, data, (Ls, Us) = db
+    with d.serve(engine="cpu") as srv:
+        with pytest.raises(TypeError, match="typed query"):
+            srv.submit((Ls, Us))
+        with pytest.raises(ValueError):
+            srv.submit(Count(Us, Ls))       # Ls > Us
+        assert srv.stats()["submitted"] == 0
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(Count(Ls[:1], Us[:1]))   # after close
+
+
+def test_server_over_router_matches_unsharded_oracle(db):
+    d, data, (Ls, Us) = db
+    router = Router.build(data, 3, K=default_K(2), learn=False,
+                          cfg=IndexConfig(paging="heuristic",
+                                          page_bytes=1024))
+    qs = _mixed_queries(data, Ls, Us, n=16, seed=7)
+    with router.serve(slo=SLOConfig(window_init_ms=1.0)) as srv:
+        tickets = [srv.submit(q) for q in qs]
+        results = [t.result(timeout=60) for t in tickets]
+    for q, res in zip(qs, results):
+        assert_bit_identical(res, d.query(q, engine="cpu"),
+                             context=q.kind)
+
+
+# ---------------------------------------------------------------------------
+# Session substrate: thread safety + discard (the serving prerequisites)
+# ---------------------------------------------------------------------------
+
+
+def test_session_concurrent_submits_unique_seqs_and_exact(db):
+    d, data, (Ls, Us) = db
+    s = d.session(engine="cpu")
+    out = {}
+
+    def worker(name):
+        qs = _mixed_queries(data, Ls, Us, n=5, seed=hash(name) % 997)
+        out[name] = [(q, s.submit(q, client=name)) for q in qs]
+
+    threads = [threading.Thread(target=worker, args=(f"w{i}",))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    pairs = [p for v in out.values() for p in v]
+    assert sorted(t.seq for _, t in pairs) == list(range(40))
+    s.flush()
+    for q, t in pairs:
+        assert t.done()
+        assert_bit_identical(t.result(), d.query(q, engine="cpu"),
+                             context=f"seq{t.seq}")
+
+
+def test_session_discard_drops_pending_and_times_out(db):
+    d, data, (Ls, Us) = db
+    s = d.session(engine="cpu", tick=10_000)
+    keep = s.submit(Count(Ls[:1], Us[:1]))
+    drop = s.submit(Count(Ls[1:2], Us[1:2]))
+    assert s.discard([drop]) == 1 and len(s) == 1
+    with pytest.raises(ServingTimeout):
+        drop.result(timeout=0.05)
+    np.testing.assert_array_equal(
+        keep.result().counts,
+        d.query(Count(Ls[:1], Us[:1]), engine="cpu").counts)
+    assert s.discard([drop]) == 0           # idempotent
+
+
+def test_session_flush_failure_counters_and_requeue_accounting(db):
+    """Satellite: the failed-batch requeue path accounts exactly — every
+    ticket resolves after the retry, and the failure/requeue counters see
+    one failed flush covering the unresolved submissions."""
+    d, data, (Ls, Us) = db
+    s = d.session(engine="cpu", tick=10_000)
+    tickets = [s.submit(Count(Ls[i:i + 1], Us[i:i + 1]), client=f"c{i}")
+               for i in range(4)]
+    t_pt = s.submit(Point(data[:2]))        # second group in the batch
+    orig = d.query
+    calls = {"n": 0}
+
+    def fails_once(q, U=None, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient engine failure")
+        return orig(q, U, **kw)
+
+    d.query = fails_once
+    obs.enable()
+    try:
+        assert s.flush_failures == 0
+        with pytest.raises(RuntimeError, match="transient"):
+            s.flush()
+        # first group failed before anything resolved: all 5 requeued
+        assert s.flush_failures == 1 and len(s) == 5
+        assert not any(t.done() for t in tickets + [t_pt])
+        requeues = obs.registry.snapshot().get("session.requeues")
+        assert requeues == 5
+        s.flush()                           # retry resolves everything
+    finally:
+        d.query = orig
+        obs.disable()
+        obs.reset()
+    assert all(t.done() for t in tickets + [t_pt]) and len(s) == 0
+    assert s.flush_failures == 1            # the retry was clean
+    for i, t in enumerate(tickets):
+        np.testing.assert_array_equal(
+            t.result().counts,
+            d.query(Count(Ls[i:i + 1], Us[i:i + 1]), engine="cpu").counts)
+    np.testing.assert_array_equal(
+        t_pt.result().found, d.query(Point(data[:2]), engine="cpu").found)
+
+
+# ---------------------------------------------------------------------------
+# load harness
+# ---------------------------------------------------------------------------
+
+
+def test_make_query_log_deterministic_and_well_formed(db):
+    d, data, _ = db
+    spec = LoadSpec(rate_qps=500.0, duration_s=0.5, n_clients=20, seed=3)
+    log1 = make_query_log(data, spec)
+    log2 = make_query_log(data, spec)
+    assert len(log1) == len(log2) > 0
+    for a1, a2 in zip(log1, log2):
+        assert a1.t == a2.t and a1.client == a2.client
+        assert type(a1.query) is type(a2.query)
+    times = [a.t for a in log1]
+    assert times == sorted(times) and times[-1] < spec.duration_s
+    kinds = {a.query.kind for a in log1}
+    assert kinds == {"count", "range", "point", "knn"}
+    clients = {a.client for a in log1}
+    assert len(clients) > 1                 # interleaved client labels
+    other = make_query_log(data, LoadSpec(rate_qps=500.0, duration_s=0.5,
+                                          n_clients=20, seed=4))
+    assert [a.t for a in other] != times    # seed actually matters
+
+    with pytest.raises(ValueError, match="rate_qps"):
+        LoadSpec(rate_qps=0.0)
+    with pytest.raises(ValueError, match="zipf_a"):
+        LoadSpec(rate_qps=1.0, zipf_a=1.0)
+    with pytest.raises(ValueError, match="mix"):
+        LoadSpec(rate_qps=1.0, mix=(("count", 0.5),))
+
+
+def test_run_open_loop_end_to_end_exact(db):
+    d, data, _ = db
+    spec = LoadSpec(rate_qps=300.0, duration_s=0.4, n_clients=16, seed=5)
+    log = make_query_log(data, spec)
+    srv = AsyncServer(d, slo=SLOConfig(window_init_ms=1.0), engine="cpu")
+    try:
+        point = run_open_loop(srv, log)
+    finally:
+        srv.close()
+    assert point["scheduled"] == len(log)
+    assert point["completed"] == point["admitted"] == len(log)
+    assert point["failed"] == 0 and point["sustained_qps"] > 0
+    lat = point["latency_ms"]
+    assert lat["count"] == len(log) and lat["p50"] <= lat["p95"] <= lat["p99"]
+    oracle = replay_serial(d, srv.query_log(), engine="cpu")
+    for seq, res in point["results"].items():
+        assert_bit_identical(res, oracle[seq], context=f"seq{seq}")
+
+
+def test_quantiles_ms_empty_and_ordered():
+    assert quantiles_ms([])["count"] == 0
+    q = quantiles_ms(list(range(100)))
+    assert q["count"] == 100 and q["p50"] <= q["p95"] <= q["p99"]
