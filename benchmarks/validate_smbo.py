@@ -1,0 +1,80 @@
+"""Schema gate for the SMBO benchmark artifact (CI ``bench-smbo-smoke``).
+
+Validates BENCH_smbo.json: the common bench envelope, a true
+``costs_equal_to_last_ulp`` flag (the three evaluators — legacy per-query,
+batched numpy, pooled device — must agree bit-for-bit), internally
+consistent timing sections, and the learn_sfc speedup floor the report
+itself declares (>= 5x on the smoke config, >= 10x on full runs) — so a
+pooled-evaluator regression (cost drift or the device loop losing its win
+over the PR 3 legacy path) fails the push, not a later debugging session.
+
+    PYTHONPATH=src python benchmarks/validate_smbo.py \
+        [--report BENCH_smbo.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+REQUIRED_KEYS = ("schema", "host", "jax_version", "config",
+                 "workload_eval", "batcheval_end_to_end", "learn_sfc",
+                 "costs_equal_to_last_ulp", "per_candidate_cost", "floors")
+WORKLOAD_KEYS = ("legacy_s", "batched_s", "pooled_s", "pooled_compile_s",
+                 "speedup", "speedup_pooled")
+LEARN_KEYS = ("legacy_s", "batched_s", "pooled_s", "warmup_s", "speedup",
+              "speedup_batched", "y_best")
+
+
+def validate(doc: dict) -> None:
+    missing = [k for k in REQUIRED_KEYS if k not in doc]
+    assert not missing, f"report missing keys: {missing}"
+    assert doc["schema"] == 1, f"unknown schema {doc['schema']!r}"
+
+    cfg = doc["config"]
+    for k in ("n", "n_q", "pool", "d", "K", "smoke"):
+        assert k in cfg, f"config missing {k!r}"
+    assert cfg["pool"] >= 2, "pool too small to mean anything"
+
+    assert doc["costs_equal_to_last_ulp"] is True, (
+        "evaluators disagree — the pooled/batched paths must reproduce the "
+        "per-query costs bit-for-bit")
+    costs = doc["per_candidate_cost"]
+    assert len(costs) == cfg["pool"], (
+        f"expected {cfg['pool']} per-candidate costs, got {len(costs)}")
+    assert all(isinstance(c, float) and c > 0 for c in costs), (
+        "per-candidate costs must be positive floats")
+
+    we = doc["workload_eval"]
+    missing = [k for k in WORKLOAD_KEYS if k not in we]
+    assert not missing, f"workload_eval missing keys: {missing}"
+    assert all(we[k] >= 0 for k in WORKLOAD_KEYS), "negative timing"
+
+    ls = doc["learn_sfc"]
+    missing = [k for k in LEARN_KEYS if k not in ls]
+    assert not missing, f"learn_sfc missing keys: {missing}"
+    assert ls["y_best"] > 0, "degenerate y_best"
+
+    floor = doc["floors"]["learn_sfc_speedup_min"]
+    expect = 5.0 if cfg["smoke"] else 10.0
+    assert floor >= expect, (
+        f"report declares a {floor}x floor but the "
+        f"{'smoke' if cfg['smoke'] else 'full'} config requires {expect}x")
+    assert ls["speedup"] >= floor, (
+        f"pooled learn_sfc speedup {ls['speedup']}x under the {floor}x "
+        f"floor — the device-resident loop lost its win over the legacy "
+        f"path")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default="BENCH_smbo.json")
+    args = ap.parse_args()
+    with open(args.report) as f:
+        doc = json.load(f)
+    validate(doc)
+    print(f"OK: {args.report} passes the SMBO schema gate "
+          f"({doc['learn_sfc']['speedup']}x learn_sfc, costs ulp-equal)")
+
+
+if __name__ == "__main__":
+    main()

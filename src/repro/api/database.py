@@ -57,13 +57,23 @@ _FAMILIES = ("global", "piecewise")
 
 
 def _learn_curve(data, workload, K, smbo=None, sample=3000, seed=0,
-                 space="global"):
-    """Sample the data and run SMBO curve-learning (shared by fit/rebuild)."""
+                 space="global", pool=None, iters=None):
+    """Sample the data and run SMBO curve-learning (shared by fit/rebuild).
+
+    `seed` drives BOTH the data sampling and the SMBO run itself (candidate
+    generation, surrogate, acquisition tie-breaks), so a fixed seed makes
+    the learned curve fully reproducible.  `pool`/`iters` override the
+    conservative fit defaults; anything in `smbo` wins over both."""
     from ..core.smbo import learn_sfc         # heavy import, lazy
     Ls, Us = workload
     rng = np.random.default_rng(seed)
     samp = data[rng.choice(len(data), min(sample, len(data)), replace=False)]
-    kw = dict(max_iters=3, n_init=5, evals_per_iter=2, space=space)
+    kw = dict(max_iters=3, n_init=5, evals_per_iter=2, space=space,
+              seed=seed)
+    if pool is not None:
+        kw["pool_size"] = int(pool)
+    if iters is not None:
+        kw["max_iters"] = int(iters)
     kw.update(smbo or {})
     return learn_sfc(samp, np.asarray(Ls), np.asarray(Us), K=K, **kw)
 
@@ -116,7 +126,8 @@ class Database:
     @classmethod
     def fit(cls, data, workload=None, *, cfg: IndexConfig = None,
             K: int = None, theta: Theta = None, curve=None,
-            learn: bool = True, sample: int = 3000, smbo: dict = None,
+            learn: bool = True, sample: int = 3000, pool: int = None,
+            iters: int = None, smbo: dict = None,
             policy: RebuildPolicy = None, seed: int = 0) -> "Database":
         """SMBO curve-learning (when a training workload is given) + build.
 
@@ -127,9 +138,18 @@ class Database:
         ``db.index.curve.to_json()``; round-trips exactly) pins the curve
         with no learning.  `workload` is the ``(Ls, Us)`` training
         workload; without it (or with ``learn=False``) the index is built
-        on the pinned curve or the family's z-order member.  `smbo`
-        forwards kwargs to :func:`repro.core.smbo.learn_sfc` (e.g.
-        ``{"depth": 2}`` for deeper piecewise quadtrees).
+        on the pinned curve or the family's z-order member.
+
+        SMBO knobs: `pool` (candidate pool size per iteration) and `iters`
+        (SMBO iterations) override the conservative defaults — the pooled
+        device evaluator makes larger values cheap (BENCH_smbo.json);
+        `seed` makes the whole fit reproducible (data sampling AND the
+        SMBO run); `smbo` forwards any further kwargs to
+        :func:`repro.core.smbo.learn_sfc` (e.g. ``{"depth": 2}`` for
+        deeper piecewise quadtrees) and wins over `pool`/`iters`.  Fit
+        progress lands in the obs gauges ``smbo.best_cost`` /
+        ``smbo.iteration`` (visible via :meth:`stats` once
+        ``repro.obs.enable()`` is on).
         """
         data = np.asarray(data, dtype=np.uint64)
         d = data.shape[1]
@@ -145,7 +165,8 @@ class Database:
                     with obs.span("database.fit.learn", family=family):
                         fit_result = _learn_curve(data, workload, K,
                                                   smbo=smbo, sample=sample,
-                                                  seed=seed, space=family)
+                                                  seed=seed, space=family,
+                                                  pool=pool, iters=iters)
                     fixed = fit_result.curve_best
                 else:
                     fixed = default_curve(d, K, family=family,

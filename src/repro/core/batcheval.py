@@ -25,11 +25,20 @@ per-query engine.
 """
 from __future__ import annotations
 
-import numpy as np
+import functools
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .. import obs
+from .curve import pack_curve_pool
 from .index import LMSFCIndex
 from .query import QueryStats, run_workload
-from .split import recursive_split_np_batch
+from .sfc import encode_z64_dyn
+from .split import _split_once_enc, recursive_split_np_batch
+from .zorder64 import u32_le, u32_lt, u64_to_z64, z64_le, z64_searchsorted
 
 # element budget per query chunk (bools/int64 intermediates); keeps the
 # (C, S, P) and (C, n) tensors comfortably in cache-friendly territory
@@ -123,3 +132,183 @@ def run_workload_batched(index: LMSFCIndex, Ls: np.ndarray, Us: np.ndarray):
         agg.subqueries += int(leaves.sum())
         agg.result += int((base + matches).sum())
     return counts, agg
+
+
+# ---------------------------------------------------------------------------
+# pooled evaluation: the whole SMBO candidate pool as ONE jitted program
+# ---------------------------------------------------------------------------
+#
+# The per-candidate costs in BENCH_smbo.json are embarrassingly parallel:
+# every candidate replays the same workload against its own mini-index.  The
+# pool axis rides a `lax.map` over packed per-candidate arrays (curve layout
+# included, as data — see `core.curve.pack_curve_pool`), so a single compile
+# serves every candidate and every SMBO iteration.  All device arithmetic is
+# integer (Z64 compares, u32 window tests, bool mask algebra); the float
+# cost combination happens on host from the returned integer stats, which is
+# what makes the pooled costs ulp-identical to the per-candidate paths.
+#
+# Shape contract (pool axis leading, all padded to static buckets):
+#   pos (P', R, T) reg (P', M)      — packed curves (CurvePool)
+#   xs32 (P', n, d)                 — page-ordered coords, u32-viewed int32
+#   row_page / sd_row (P', n)       — row -> page / page sort-dim per row
+#   sizes (P', Pmax)                — page sizes (0 past a candidate's pages)
+#   mbr_lo / mbr_hi (P', Pmax, d)   — page MBRs (impossible hi<lo padding)
+#   pzmin / pzmax (P', Pmax, 2)     — page z-ranges as Z64 (+inf/0 padding)
+#   n_pages (P',)                   — real page count per candidate
+# P' = pow2(P) (padded with copies of candidate 0), Pmax = pow2(max pages).
+
+
+def _pow2ceil(v: int) -> int:
+    return 1 << max(0, int(v - 1).bit_length())
+
+
+def _candidate_stats(cand, qL32, qU32, d: int, k: int):
+    """One candidate's whole-workload stats, all-integer, on device.
+    Mirrors `run_workload_batched` line by line; the row-level accounting
+    runs over all n rows with a partial-page mask instead of gathering the
+    dynamic row subset (identical sums, static shapes)."""
+    (pos, reg, xs32, row_page, sd_row, sizes, mbr_lo, mbr_hi,
+     pzmin, pzmax, n_pages) = cand
+    enc = functools.partial(encode_z64_dyn, pos=pos, reg=reg)
+    Pmax = pzmin.shape[0]
+
+    # ---- split + projection (Theorem 1) ---------------------------------
+    rects = jnp.stack([qL32, qU32], axis=-1).astype(jnp.uint32)[:, None]
+    valid = jnp.ones(rects.shape[:2], bool)           # (Q, 1)
+    for _ in range(k):
+        rects, valid = _split_once_enc(rects, valid, d, enc)
+    zlo = enc(rects[..., 0].astype(jnp.int32))        # (Q, S, 2)
+    zhi = enc(rects[..., 1].astype(jnp.int32))
+    plo = jnp.clip(z64_searchsorted(pzmin, zlo, side="right") - 1,
+                   0, n_pages - 1)
+    phi = jnp.clip(z64_searchsorted(pzmin, zhi, side="right") - 1,
+                   0, n_pages - 1)
+    # ---- candidate-page masks -------------------------------------------
+    page_ar = jnp.arange(Pmax, dtype=jnp.int32)
+    inrange = ((plo[..., None] <= page_ar) &
+               (page_ar <= phi[..., None]))           # (Q, S, Pmax)
+    zov = (z64_le(zlo[..., None, :], pzmax) &
+           z64_le(pzmin, zhi[..., None, :]))
+    candp = jnp.any(inrange & zov & valid[..., None], axis=1)  # (Q, Pmax)
+    # ---- MBR classification ---------------------------------------------
+    disjoint = (u32_lt(qU32[:, None], mbr_lo) |
+                u32_lt(mbr_hi, qL32[:, None])).any(-1)         # (Q, Pmax)
+    contained = (u32_le(qL32[:, None], mbr_lo) &
+                 u32_le(mbr_hi, qU32[:, None])).all(-1)
+    accessed = candp & ~disjoint
+    fullpg = accessed & contained
+    partial = accessed & ~contained
+    base = jnp.where(fullpg, sizes, 0).sum(-1)        # (Q,)
+    # ---- row-level accounting for partial pages -------------------------
+    prow = partial[:, row_page]                       # (Q, n)
+    ok_full = jnp.ones(prow.shape, bool)
+    sd_ok = jnp.zeros(prow.shape, bool)
+    for i in range(d):
+        wi = (u32_le(qL32[:, i:i + 1], xs32[:, i]) &
+              u32_le(xs32[:, i], qU32[:, i:i + 1]))   # (Q, n)
+        ok_full &= wi
+        sd_ok |= wi & (sd_row == i)
+    scanned = (prow & sd_ok).sum(-1)                  # (Q,) int32
+    matches = (prow & ok_full).sum(-1)
+    counts = base + matches
+    return jnp.stack([counts, accessed.sum(-1), (candp & disjoint).sum(-1),
+                      scanned, matches, valid.sum(-1)], axis=0)  # (6, Q)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _pool_program(d: int, k: int, qL32, qU32, stacked):
+    """The pooled program: lax.map of the per-candidate body over the packed
+    pool.  Compiles once per (d, k, Q, n, P', Pmax, R, T, M) bucket."""
+    return lax.map(
+        lambda cand: _candidate_stats(cand, qL32, qU32, d, k), stacked)
+
+
+def _pack_index_pool(indexes):
+    """Stack P candidate indexes into the padded pool arrays above."""
+    cp = pack_curve_pool([ix.curve for ix in indexes])
+    P, n, d = len(indexes), indexes[0].n, indexes[0].d
+    Ppad = _pow2ceil(P)
+    Pmax = _pow2ceil(max(ix.num_pages for ix in indexes))
+    R, T = cp.pos.shape[1:]
+    M = cp.reg.shape[1]
+    pos = np.tile(cp.pos[:1], (Ppad, 1, 1))
+    reg = np.tile(cp.reg[:1], (Ppad, 1))
+    pos[:P], reg[:P] = cp.pos, cp.reg
+    xs32 = np.empty((Ppad, n, d), np.int32)
+    row_page = np.empty((Ppad, n), np.int32)
+    sd_row = np.empty((Ppad, n), np.int32)
+    sizes = np.zeros((Ppad, Pmax), np.int32)
+    mbr_lo = np.full((Ppad, Pmax, d), -1, np.int32)   # u32 0xFFFFFFFF > hi=0
+    mbr_hi = np.zeros((Ppad, Pmax, d), np.int32)
+    pzmin = np.full((Ppad, Pmax, 2), -1, np.int32)    # +inf z: never overlaps
+    pzmax = np.zeros((Ppad, Pmax, 2), np.int32)
+    n_pages = np.empty(Ppad, np.int32)
+    for p in range(Ppad):
+        ix = indexes[min(p, P - 1)]
+        np_ = ix.num_pages
+        xs32[p] = ix.xs.astype(np.uint32).view(np.int32)
+        sz = np.diff(ix.starts)
+        row_page[p] = np.repeat(np.arange(np_, dtype=np.int32),
+                                sz.astype(np.int64))
+        sd_row[p] = ix.sort_dims[row_page[p]]
+        sizes[p, :np_] = sz
+        mbr_lo[p, :np_] = ix.mbrs[..., 0].astype(np.uint32).view(np.int32)
+        mbr_hi[p, :np_] = ix.mbrs[..., 1].astype(np.uint32).view(np.int32)
+        pzmin[p, :np_] = u64_to_z64(ix.page_zmin)
+        pzmax[p, :np_] = u64_to_z64(ix.page_zmax)
+        n_pages[p] = np_
+    return (pos, reg, xs32, row_page, sd_row, sizes, mbr_lo, mbr_hi,
+            pzmin, pzmax, n_pages)
+
+
+def run_workload_pool(indexes, Ls: np.ndarray, Us: np.ndarray,
+                      engine: str = "jax"):
+    """Evaluate the same workload against P candidate indexes at once.
+
+    Returns a list of per-candidate ``(counts, QueryStats)`` pairs, each
+    bit-identical to `run_workload_batched(index, Ls, Us)` (and therefore to
+    the legacy per-query evaluator).  ``engine="jax"`` runs the single
+    jitted pool program; ``engine="np"`` is the numpy pool loop (no compile
+    cost — the right choice for tiny pools and one-off fits)."""
+    if engine not in ("jax", "np"):
+        raise ValueError(f"unknown pool engine {engine!r}; "
+                         f"expected 'jax' or 'np'")
+    indexes = list(indexes)
+    if not indexes:
+        return []
+    cfg = indexes[0].cfg
+    same = all(ix.cfg is cfg or (ix.cfg.k_maxsplit == cfg.k_maxsplit and
+                                 ix.cfg.use_query_split == cfg.use_query_split
+                                 and ix.cfg.skipping == cfg.skipping)
+               for ix in indexes)
+    if (engine == "np" or not same
+            or any(_needs_fallback(ix) for ix in indexes)):
+        return [run_workload_batched(ix, Ls, Us) for ix in indexes]
+    Ls = np.atleast_2d(np.asarray(Ls, dtype=np.uint64))
+    Us = np.atleast_2d(np.asarray(Us, dtype=np.uint64))
+    Q, d = Ls.shape
+    if Q == 0:
+        return [(np.zeros(0, np.int64), QueryStats()) for _ in indexes]
+    k = cfg.k_maxsplit if (cfg.use_query_split and cfg.skipping == "rqs") \
+        else 0
+    qL32 = Ls.astype(np.uint32).view(np.int32)
+    qU32 = Us.astype(np.uint32).view(np.int32)
+    stacked = _pack_index_pool(indexes)
+    out = np.asarray(_pool_program(d, k, qL32, qU32, stacked))
+    if obs.enabled():
+        obs.inc("smbo.pool_eval.dispatches")
+        obs.inc("smbo.pool_eval.candidates", len(indexes))
+    res = []
+    for p in range(len(indexes)):
+        counts, pages, irr, scanned, matches, leaves = \
+            out[p].astype(np.int64)
+        agg = QueryStats(
+            pages_accessed=int(pages.sum()),
+            irrelevant_pages=int(irr.sum()),
+            points_scanned=int(scanned.sum()),
+            false_positives=int((scanned - matches).sum()),
+            index_accesses=int(2 * leaves.sum()),
+            subqueries=int(leaves.sum()),
+            result=int(counts.sum()))
+        res.append((counts, agg))
+    return res

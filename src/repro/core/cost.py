@@ -10,10 +10,14 @@ c_page=1.0, c_scan=0.02, c_idx=0.1: one 8KB page access ≈ 50 point
 inspections ≈ 10 learned-index probes.  Deterministic and noise-free, which
 also removes the finite-sample evaluation noise the paper mentions.
 
-Two evaluators produce bit-identical costs (asserted in CI):
-  'batched' — whole-workload numpy (core/batcheval.py); the default, it is
-              what lets SMBO afford large candidate pools (BENCH_smbo.json)
+Three evaluators produce bit-identical costs (asserted in CI):
+  'pooled'  — the whole candidate pool as one jitted device program
+              (core/batcheval.py run_workload_pool); the SMBO default
+  'batched' — whole-workload numpy per candidate (core/batcheval.py)
   'legacy'  — the faithful per-query loop (core/query.py run_workload)
+
+Every path returns the same integer `QueryStats` and combines them with the
+same host-float expression below, so cost equality holds to the last ulp.
 """
 from __future__ import annotations
 
@@ -21,7 +25,7 @@ import dataclasses
 
 import numpy as np
 
-from .batcheval import run_workload_batched
+from .batcheval import run_workload_batched, run_workload_pool
 from .curve import as_curve
 from .index import IndexConfig, LMSFCIndex
 from .query import run_workload
@@ -70,3 +74,37 @@ def evaluate_curve(curve, data: np.ndarray, Ls: np.ndarray,
 
 # legacy name (pre-curve call sites); same semantics, any curve accepted
 evaluate_theta = evaluate_curve
+
+
+def _stats_cost(agg, nq: int) -> float:
+    """The one float combination shared by every evaluator path."""
+    return CostBreakdown(pages=agg.pages_accessed / nq,
+                         scanned=agg.points_scanned / nq,
+                         index_accesses=agg.index_accesses / nq).total
+
+
+def evaluate_pool(curves, data: np.ndarray, Ls: np.ndarray, Us: np.ndarray,
+                  cfg: IndexConfig = None, K: int = None,
+                  engine: str = "auto") -> np.ndarray:
+    """Costs for a whole candidate pool in one pass (Algorithm 1, line 4
+    device-resident): build the per-candidate mini-indexes on host, then
+    evaluate all of them against the workload with `run_workload_pool`.
+
+    Each returned cost is bit-identical to `evaluate_curve` on the same
+    candidate: identical index build, identical integer stats, identical
+    host float combination.  ``engine``: 'jax' (one jitted program),
+    'np' (numpy loop, no compile cost), or 'auto' — jax when the pool and
+    workload are big enough to amortize dispatch, np otherwise."""
+    curves = [as_curve(c) for c in curves]
+    if not curves:
+        return np.zeros(0, dtype=np.float64)
+    cfg = cfg or IndexConfig(paging="heuristic")
+    idxs = [LMSFCIndex.build(data, curve=c, cfg=cfg, workload=(Ls, Us), K=K)
+            for c in curves]
+    if engine == "auto":
+        work = len(np.atleast_2d(Ls)) * idxs[0].n
+        engine = "jax" if len(curves) >= 4 and work >= 500_000 else "np"
+    results = run_workload_pool(idxs, Ls, Us, engine=engine)
+    nq = max(1, len(np.atleast_2d(Ls)))
+    return np.array([_stats_cost(agg, nq) for _, agg in results],
+                    dtype=np.float64)

@@ -464,6 +464,71 @@ class PiecewiseCurve(MonotonicCurve):
 
 
 # ---------------------------------------------------------------------------
+# candidate pools — curves packed as arrays for device-resident evaluation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CurvePool:
+    """P candidate curves packed as plain int32 arrays so a single jitted
+    program (core/sfc.py `encode_z64_dyn`, core/batcheval.py's pooled
+    evaluator, the candidate-batched kernels/sfc_encode kernel) can encode
+    under any of them without per-curve recompilation.
+
+    Shape contract (the pool axis is always leading):
+      pos (P, R, T) — output position of flat input bit t = i*K + j, per
+                      region; R = max region count over the pool, rows past
+                      a curve's own count repeat row 0 (unreachable padding)
+      reg (P, M)    — flat input-bit index feeding region-code bit m; the
+                      sentinel index T selects a constant-zero bit plane, so
+                      global curves (and shallower quadtrees) pad with T and
+                      keep region code 0
+    """
+
+    pos: np.ndarray         # (P, R, T) int32
+    reg: np.ndarray         # (P, M) int32
+    d: int
+    K: int
+
+    def __len__(self) -> int:
+        return len(self.pos)
+
+
+def pack_curve_pool(curves) -> CurvePool:
+    """Pack a mixed global/piecewise candidate pool (shared d and K) into a
+    `CurvePool`.  Cost: one `pos_of_bit` layout per region per curve."""
+    curves = [as_curve(c) for c in curves]
+    if not curves:
+        raise ValueError("empty candidate pool")
+    d, K = curves[0].d, curves[0].K
+    for c in curves:
+        if c.d != d or c.K != K:
+            raise ValueError(f"pool mixes shapes: ({c.d}, {c.K}) vs ({d}, {K})")
+    T = d * K
+    R = max((c.num_regions if isinstance(c, PiecewiseCurve) else 1)
+            for c in curves)
+    M = max([d * c.depth for c in curves
+             if isinstance(c, PiecewiseCurve)] + [1])
+    pos = np.zeros((len(curves), R, T), dtype=np.int32)
+    reg = np.full((len(curves), M), T, dtype=np.int32)   # default: zero plane
+    for p, c in enumerate(curves):
+        if isinstance(c, PiecewiseCurve):
+            low = c.K - c.depth
+            for m in range(c.d * c.depth):
+                i = c.prefix_order[m % c.d]
+                reg[p, m] = i * K + (low + m // c.d)
+            for r in range(c.num_regions):
+                pos[p, r] = c.full_theta(r).pos_of_bit.ravel()
+        elif isinstance(c, GlobalTheta):
+            pos[p, :] = c.theta.pos_of_bit.ravel()
+        else:
+            raise TypeError(f"cannot pack curve kind {type(c).__name__!r}")
+        if isinstance(c, PiecewiseCurve) and c.num_regions < R:
+            pos[p, c.num_regions:] = pos[p, 0]
+    return CurvePool(pos=pos, reg=reg, d=d, K=K)
+
+
+# ---------------------------------------------------------------------------
 # family factories (shared by SMBO init and the Database facade)
 # ---------------------------------------------------------------------------
 

@@ -59,9 +59,19 @@ def _spread_tables(theta: Theta):
     return tables
 
 
+# Below this many points, the 64-step bit loop beats building (and caching)
+# a fresh set of spread tables (~11 ms per new θ): SMBO evaluates hundreds of
+# throwaway candidate curves over small sampled datasets, where eager table
+# builds used to dominate the learn loop (70% of pool-eval wall clock).
+_TABLE_BREAKEVEN = 50_000
+
+
 def encode_np(x: np.ndarray, theta: Theta) -> np.ndarray:
     """x: (..., d) unsigned ints (values < 2^K) -> (...,) uint64 z-address."""
     x = np.asarray(x, dtype=np.uint64)
+    if ((theta.d, theta.K, theta.seq) not in _TABLE_CACHE
+            and x.size < _TABLE_BREAKEVEN * theta.d):
+        return encode_np_ref(x, theta)
     tables = _spread_tables(theta)
     z = np.zeros(x.shape[:-1], dtype=np.uint64)
     n_chunks = tables.shape[1]
@@ -107,6 +117,46 @@ def encode_jax(x, theta: Theta):
             lo = lo | (b << np.int32(l))
         else:
             hi = hi | (b << np.int32(l - 32))
+    return jnp.stack([hi, lo], axis=-1)
+
+
+def encode_z64_dyn(x, pos, reg):
+    """Data-driven Z64 encode: the curve layout is a runtime *array*, not a
+    static python object, so one jitted program serves every candidate in an
+    SMBO pool (the static-θ `encode_jax` above recompiles per curve).
+
+    x:   (..., d) int32 coords (unsigned semantics, values < 2^K)
+    pos: (R, T) int32 — output position of flat input bit t = i*K + j for
+         each of R regions (R = 1 for a global θ; rows past a curve's real
+         region count are unreachable padding)
+    reg: (M,) int32 — flat input-bit index feeding region-code bit m, where
+         index T addresses a constant-zero plane (padding for global curves
+         and for pools mixing quadtree depths)
+
+    Returns (..., 2) int32 Z64.  Exact: every output bit lands in a distinct
+    position, so the masked-shift sums below reproduce the bitwise OR of the
+    reference chain (int32 wraparound is two's-complement, carry-free here).
+    """
+    R, T = pos.shape
+    d = x.shape[-1]
+    K = T // d
+    shifts = jnp.arange(K, dtype=jnp.int32)
+    bits = (x[..., :, None] >> shifts) & 1                 # (..., d, K)
+    bits = bits.reshape(x.shape[:-1] + (T,))
+    bits = jnp.concatenate(
+        [bits, jnp.zeros(x.shape[:-1] + (1,), jnp.int32)], axis=-1)
+    M = reg.shape[0]
+    if M:
+        rbits = jnp.take(bits, reg, axis=-1)               # (..., M)
+        r = (rbits << jnp.arange(M, dtype=jnp.int32)).sum(-1)
+    else:
+        r = jnp.zeros(x.shape[:-1], jnp.int32)
+    bt = bits[..., None, :T]                               # (..., 1, T)
+    lo_all = jnp.where(pos < 32, bt << jnp.minimum(pos, 31), 0).sum(-1)
+    hi_all = jnp.where(pos >= 32, bt << jnp.clip(pos - 32, 0, 31), 0).sum(-1)
+    r1 = r[..., None]
+    lo = jnp.take_along_axis(lo_all, r1, axis=-1)[..., 0]
+    hi = jnp.take_along_axis(hi_all, r1, axis=-1)[..., 0]
     return jnp.stack([hi, lo], axis=-1)
 
 

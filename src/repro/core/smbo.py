@@ -9,23 +9,38 @@ random curves.  The search space is any registered `MonotonicCurve` family:
 independent θ per region (`depth` levels).  The objective is the
 deterministic scan-cost proxy of cost.py evaluated on (sampled) data +
 (sampled) workload — the paper's BatchEval with QueryTime replaced per
-DESIGN.md §4, vectorized over the whole workload by core/batcheval.py so
-larger pools/iterations stay affordable (BENCH_smbo.json).
+DESIGN.md §4.
+
+Evaluation is device-resident by default: every BatchEval round (the
+initial design and each iteration's selected candidates) goes through
+`cost.evaluate_pool`, which runs the whole candidate set as ONE jitted
+program (core/batcheval.py `run_workload_pool`).  All evaluator choices
+produce bit-identical costs — 'pooled' / 'pooled-jax' / 'pooled-np'
+(engine auto/forced), 'batched' (per-candidate numpy) and 'legacy' (the
+per-query loop) — asserted by BENCH_smbo.json's `costs_equal_to_last_ulp`.
+
+Determinism: one `np.random.Generator` seeded from `seed` drives candidate
+generation, the surrogate's bootstrap/feature draws, and the acquisition
+tie-break (a seeded permutation before a stable sort), so same-seed runs
+return identical `SMBOResult`s (tests/test_smbo.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
-from .cost import evaluate_curve
+from .cost import evaluate_curve, evaluate_pool
 from .curve import MonotonicCurve, init_curves, random_curve
 from .index import IndexConfig
 from .surrogate import RandomForest
 
 _SQRT2 = math.sqrt(2.0)
+_SQRT2PI = math.sqrt(2.0 * math.pi)
 
 
 def _norm_cdf(z):
@@ -33,14 +48,24 @@ def _norm_cdf(z):
 
 
 def _norm_pdf(z):
-    return np.exp(-0.5 * z * z) / math.sqrt(2 * math.pi)
+    return np.exp(-0.5 * z * z) / _SQRT2PI
 
 
 def expected_improvement(mu, sigma, best):
-    """EI for minimization."""
+    """EI for minimization (numpy reference; the SMBO loop runs the jitted
+    `_ei_jax` twin, same formula on device)."""
     sigma = np.maximum(sigma, 1e-9)
     z = (best - mu) / sigma
     return (best - mu) * _norm_cdf(z) + sigma * _norm_pdf(z)
+
+
+@jax.jit
+def _ei_jax(mu, sigma, best):
+    sigma = jnp.maximum(sigma, 1e-9)
+    z = (best - mu) / sigma
+    cdf = 0.5 * (1.0 + jax.scipy.special.erf(z / _SQRT2))
+    pdf = jnp.exp(-0.5 * z * z) / _SQRT2PI
+    return (best - mu) * cdf + sigma * pdf
 
 
 @dataclasses.dataclass
@@ -57,21 +82,43 @@ class SMBOResult:
         return self.curve_best
 
 
+# evaluator name -> run_workload_pool engine for the pooled paths
+_POOL_ENGINES = {"pooled": "auto", "pooled-jax": "jax", "pooled-np": "np"}
+
+
 def learn_sfc(data: np.ndarray, Ls: np.ndarray, Us: np.ndarray, *,
               K: int, cfg: IndexConfig = None, space: str = "global",
               depth: int = 1, max_iters: int = 10, n_init: int = 8,
               pool_size: int = 48, evals_per_iter: int = 4, seed: int = 0,
               verbose: bool = False,
-              evaluator: str = "batched") -> SMBOResult:
+              evaluator: str = "pooled") -> SMBOResult:
     """Algorithm 1 over the chosen curve family.  data/workload should
     already be sampled by the caller (the paper defaults to 5% of the
-    data); `depth` only applies to ``space="piecewise"``."""
+    data); `depth` only applies to ``space="piecewise"``.
+
+    `evaluator` picks the BatchEval path (all cost-identical):
+    'pooled' (default; one jitted program per round, engine auto-selected),
+    'pooled-jax' / 'pooled-np' (engine forced), 'batched' (per-candidate
+    numpy), 'legacy' (per-query loop)."""
+    if evaluator not in _POOL_ENGINES and evaluator not in ("legacy",
+                                                            "batched"):
+        raise ValueError(
+            f"unknown evaluator {evaluator!r}; expected one of "
+            f"{sorted(_POOL_ENGINES) + ['batched', 'legacy']}")
     rng = np.random.default_rng(seed)
     d = data.shape[1]
     cfg = cfg or IndexConfig(paging="heuristic")
 
-    def evaluate(c: MonotonicCurve) -> float:
-        return evaluate_curve(c, data, Ls, Us, cfg, K, evaluator=evaluator)
+    def evaluate_batch(cs: list) -> list:
+        """Line 4 (BatchEval) for one candidate round."""
+        with obs.span("smbo.pool_eval", candidates=len(cs),
+                      evaluator=evaluator):
+            if evaluator in _POOL_ENGINES:
+                ys = evaluate_pool(cs, data, Ls, Us, cfg, K,
+                                   engine=_POOL_ENGINES[evaluator])
+                return [float(v) for v in ys]
+            return [evaluate_curve(c, data, Ls, Us, cfg, K,
+                                   evaluator=evaluator) for c in cs]
 
     # --- line 1: initial design + surrogate ------------------------------
     init = init_curves(d, K, family=space, depth=depth)
@@ -83,10 +130,10 @@ def learn_sfc(data: np.ndarray, Ls: np.ndarray, Us: np.ndarray, *,
             init.append(c)
 
     with obs.span("smbo.init_design", space=space, n_init=len(init)):
-        evaluated = [(c, evaluate(c)) for c in init]
+        evaluated = list(zip(init, evaluate_batch(init)))
     if obs.enabled():
         obs.inc("smbo.evaluations", len(init), space=space)
-    model = RandomForest(seed=seed)
+    model = RandomForest(rng=rng)
     ybest_idx = int(np.argmin([y for _, y in evaluated]))
     curve_best, y_best = evaluated[ybest_idx]
     history = [(0, y_best)]
@@ -104,20 +151,24 @@ def learn_sfc(data: np.ndarray, Ls: np.ndarray, Us: np.ndarray, *,
             pool = [c for c in pool if c not in seen] or pool
             Xp = np.stack([c.features() for c in pool])
             mu, sigma = model.predict(Xp)
-            ei = expected_improvement(mu, sigma, y_best)
-            top = np.argsort(-ei)[:evals_per_iter]
+            ei = np.asarray(_ei_jax(mu, sigma, y_best), dtype=np.float64)
+            # seeded tie-break: shuffle, then stable-sort by EI descending —
+            # equal-EI candidates come out in seeded-random (but
+            # reproducible) order instead of pool-construction order
+            perm = rng.permutation(len(pool))
+            top = perm[np.argsort(-ei[perm], kind="stable")][:evals_per_iter]
 
             # --- line 4: BatchEval ---------------------------------------
-            for j in top:
-                c = pool[int(j)]
-                seen.add(c)
-                yv = evaluate(c)
+            cands = [pool[int(j)] for j in top]
+            seen.update(cands)
+            for c, yv in zip(cands, evaluate_batch(cands)):
                 evaluated.append((c, yv))
                 if yv < y_best:
                     y_best, curve_best = yv, c
         if obs.enabled():
-            obs.inc("smbo.evaluations", len(top), space=space)
+            obs.inc("smbo.evaluations", len(cands), space=space)
             obs.set_gauge("smbo.best_cost", float(y_best), space=space)
+            obs.set_gauge("smbo.iteration", float(it), space=space)
         history.append((it, y_best))
         if verbose:
             print(f"[smbo] iter {it}: best cost {y_best:.3f}")

@@ -27,22 +27,29 @@ def default_sort_dim(queries_L: np.ndarray, queries_U: np.ndarray,
 
 def choose_sort_dims(mbrs: np.ndarray, queries_L: np.ndarray,
                      queries_U: np.ndarray, domain: int) -> np.ndarray:
-    """(P,) per-page sort dimension."""
+    """(P,) per-page sort dimension.
+
+    Vectorized over the whole workload (SMBO builds one throwaway index per
+    candidate curve, so this runs hundreds of times per learn).  The float
+    accumulation must stay bit-identical to the original per-query loop —
+    `cost[p] += frac` in query order — which `np.add.at` preserves: it
+    applies additions sequentially in index order, and the (query, page)
+    pairs from `nonzero` arrive query-major."""
     P, d, _ = mbrs.shape
     dflt = default_sort_dim(queries_L, queries_U, domain)
     out = np.full(P, dflt, dtype=np.int32)
     ext = (mbrs[:, :, 1] - mbrs[:, :, 0] + 1).astype(np.float64)  # (P, d)
+    inter = np.all((mbrs[None, :, :, 0] <= queries_U[:, None]) &
+                   (mbrs[None, :, :, 1] >= queries_L[:, None]), axis=2)
+    qi, pi = np.nonzero(inter)                        # query-major order
+    if len(qi) == 0:
+        return out
+    lo = np.maximum(mbrs[pi, :, 0], queries_L[qi])
+    hi = np.minimum(mbrs[pi, :, 1], queries_U[qi])
+    frac = (hi - lo + 1).astype(np.float64) / ext[pi]  # scanned fraction/dim
     cost = np.zeros((P, d), dtype=np.float64)
-    hits = np.zeros(P, dtype=np.int64)
-    for qL, qU in zip(queries_L, queries_U):
-        m = mbr_intersects(mbrs, qL, qU)
-        if not m.any():
-            continue
-        lo = np.maximum(mbrs[m, :, 0], qL)
-        hi = np.minimum(mbrs[m, :, 1], qU)
-        frac = (hi - lo + 1).astype(np.float64) / ext[m]  # scanned fraction per dim
-        cost[m] += frac
-        hits[m] += 1
+    np.add.at(cost, pi, frac)
+    hits = np.bincount(pi, minlength=P)
     sel = hits > 0
     out[sel] = np.argmin(cost[sel], axis=1)
     return out

@@ -133,10 +133,12 @@ def _msb_jax(v):
     return lax.population_count(v).astype(jnp.uint32) - jnp.uint32(1)
 
 
-def _split_once(rects, valid, curve: MonotonicCurve):
+def _split_once_enc(rects, valid, d: int, encode):
     """rects: (Q, S, d, 2) uint32 [lo, up]; valid: (Q, S) bool.
-    Returns (rects', valid') with S doubled."""
-    d = curve.d
+    Returns (rects', valid') with S doubled.  `encode` maps (..., d) int32
+    coords to (..., 2) Z64 — either a curve's static `encode_jax` or the
+    data-driven pooled encode (core/sfc.py `encode_z64_dyn`), which is what
+    lets one jitted split program serve a whole SMBO candidate pool."""
     qL = rects[..., 0]  # (Q, S, d)
     qU = rects[..., 1]
     splittable = qL < qU
@@ -148,8 +150,8 @@ def _split_once(rects, valid, curve: MonotonicCurve):
     eye = jnp.eye(d, dtype=bool)
     U_all = jnp.where(eye, (v - jnp.uint32(1))[..., :, None], qU[..., None, :])
     L_all = jnp.where(eye, v[..., :, None], qL[..., None, :])
-    fU = curve.encode_jax(U_all.astype(jnp.int32))  # (Q, S, d, 2)
-    fL = curve.encode_jax(L_all.astype(jnp.int32))
+    fU = encode(U_all.astype(jnp.int32))  # (Q, S, d, 2)
+    fL = encode(L_all.astype(jnp.int32))
     pos = z64_lt(fU, fL) & splittable  # (Q, S, d)
     gap = z64_sub(fL, fU)
     ghi = jnp.where(pos, gap[..., 0].astype(jnp.uint32), jnp.uint32(0))
@@ -178,6 +180,10 @@ def _split_once(rects, valid, curve: MonotonicCurve):
 
     Q, S = valid.shape
     return (rects2.reshape(Q, 2 * S, d, 2), valid2.reshape(Q, 2 * S))
+
+
+def _split_once(rects, valid, curve: MonotonicCurve):
+    return _split_once_enc(rects, valid, curve.d, curve.encode_jax)
 
 
 def recursive_split_jax(queries, curve, k_maxsplit: int = 4):

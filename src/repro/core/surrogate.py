@@ -1,6 +1,14 @@
 """Random-forest regression surrogate for SMBO (paper §5.2 uses an RF
-surrogate instead of a GP).  Pure numpy CART; small-n regime (SMBO evaluates
-tens-to-hundreds of configurations), so clarity over speed."""
+surrogate instead of a GP).  Pure numpy CART.
+
+The split search is vectorized across the candidate features of a node (one
+argsort/cumsum sweep over an (n, m) block instead of m per-feature passes):
+SMBO refits the forest every iteration, and the per-feature python loop was
+the single largest host cost left in `learn_sfc` after the pooled evaluator
+landed.  Selection semantics are unchanged — first feature (in draw order)
+achieving the minimum SSE wins, splits inside runs of equal x are invalid —
+and all randomness flows through one injectable `np.random.Generator`.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -17,35 +25,43 @@ class _Node:
     value: float = 0.0
 
 
+def _best_split(X, y, feats, min_leaf):
+    """Best (sse, feature, thresh) over the candidate features, or None.
+    Ties on SSE resolve to the first feature in `feats` order and the first
+    split position, matching argmin's first-occurrence rule."""
+    n = len(y)
+    if n < 2 * min_leaf:
+        return None
+    ks = np.arange(min_leaf, n - min_leaf + 1)
+    kk = ks[:, None]
+    Xf = X[:, feats]                                  # (n, m)
+    order = Xf.argsort(axis=0, kind="stable")
+    cols = np.arange(len(feats))
+    xs_s = Xf[order, cols]
+    y_s = y[order]                                    # (n, m)
+    csum = y_s.cumsum(axis=0)
+    csq = (y_s * y_s).cumsum(axis=0)
+    lsum, lsq = csum[ks - 1], csq[ks - 1]             # (nk, m)
+    rsum, rsq = csum[-1] - lsum, csq[-1] - lsq
+    sse = (lsq - lsum**2 / kk) + (rsq - rsum**2 / (n - kk))
+    sse[xs_s[ks - 1] >= xs_s[ks]] = np.inf            # no splits inside ties
+    j = sse.argmin(axis=0)                            # best position per feat
+    fsse = sse[j, cols]
+    fb = int(fsse.argmin())
+    if not np.isfinite(fsse[fb]):
+        return None
+    k = int(j[fb])
+    t = (xs_s[ks[k] - 1, fb] + xs_s[ks[k], fb]) / 2.0
+    return float(fsse[fb]), int(feats[fb]), float(t)
+
+
 def _build_tree(X, y, rng, depth, max_depth, min_leaf, n_feat):
-    node = _Node(value=float(np.mean(y)))
-    if depth >= max_depth or len(y) < 2 * min_leaf or np.ptp(y) == 0:
+    node = _Node(value=float(y.mean()))
+    if depth >= max_depth or len(y) < 2 * min_leaf or y.min() == y.max():
         return node
     feats = rng.choice(X.shape[1], size=min(n_feat, X.shape[1]), replace=False)
-    best = None  # (sse, f, t)
-    for f in feats:
-        xs = X[:, f]
-        order = np.argsort(xs)
-        xs_s, y_s = xs[order], y[order]
-        csum = np.cumsum(y_s)
-        csq = np.cumsum(y_s**2)
-        n = len(y_s)
-        ks = np.arange(min_leaf, n - min_leaf + 1)
-        if len(ks) == 0:
-            continue
-        lsum, lsq = csum[ks - 1], csq[ks - 1]
-        rsum, rsq = csum[-1] - lsum, csq[-1] - lsq
-        sse = (lsq - lsum**2 / ks) + (rsq - rsum**2 / (n - ks))
-        # skip splits between equal x values
-        valid = xs_s[ks - 1] < xs_s[ks]
-        if not valid.any():
-            continue
-        sse = np.where(valid, sse, np.inf)
-        k = int(np.argmin(sse))
-        if best is None or sse[k] < best[0]:
-            t = (xs_s[ks[k] - 1] + xs_s[ks[k]]) / 2.0
-            best = (float(sse[k]), int(f), float(t))
-    if best is None or not np.isfinite(best[0]):
+    best = _best_split(X, y, feats, min_leaf)
+    if best is None:
         return node
     _, f, t = best
     m = X[:, f] <= t
@@ -71,11 +87,15 @@ def _predict_tree(node, X):
 
 class RandomForest:
     def __init__(self, n_trees: int = 32, max_depth: int = 10,
-                 min_leaf: int = 2, seed: int = 0):
+                 min_leaf: int = 2, seed: int = 0,
+                 rng: np.random.Generator = None):
+        """`rng` (when given) is used directly — SMBO threads its one
+        run-level generator through so same-seed runs are bit-reproducible;
+        `seed` is the standalone fallback."""
         self.n_trees = n_trees
         self.max_depth = max_depth
         self.min_leaf = min_leaf
-        self.rng = np.random.default_rng(seed)
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
         self.trees = []
 
     def fit(self, X: np.ndarray, y: np.ndarray):
@@ -90,7 +110,8 @@ class RandomForest:
         return self
 
     def predict(self, X: np.ndarray):
-        """(mean, std) across trees — std feeds Expected Improvement."""
+        """(mean, std) across trees, batched over the rows of X — SMBO calls
+        this once per iteration with the whole candidate pool stacked."""
         X = np.asarray(X, np.float64)
         preds = np.stack([_predict_tree(t, X) for t in self.trees])
         return preds.mean(axis=0), preds.std(axis=0)

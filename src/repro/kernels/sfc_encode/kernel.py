@@ -119,3 +119,74 @@ def sfc_encode_dn(x_dn, curve, block_n: int = 2048,
         out_shape=jax.ShapeDtypeStruct((2, n), jnp.int32),
         interpret=interpret,
     )(x_dn)
+
+
+# ---------------------------------------------------------------------------
+# candidate-batched variant: the curve pool rides a leading grid axis
+# ---------------------------------------------------------------------------
+
+
+def _encode_pool_kernel(x_ref, pos_ref, reg_ref, out_ref):
+    """x_ref: (d, block_n) int32 — shared point block;
+    pos_ref: (1, R, T) int32 — this candidate's output-position table
+    (region r, flat input bit t = dim*K + bit), rows past the real region
+    count repeat row 0; reg_ref: (1, M) int32 — flat indexes of the region
+    bits (sentinel T = always-zero); out_ref: (1, 2, block_n) int32 Z64.
+
+    Unlike the static bodies above, the curve arrives as *data*, so the
+    shift amounts are traced values: bit planes are built once (static
+    per-dim chains), the region code via masked sums over the plane axis,
+    and each region's placement as clamped variable shifts gated by
+    `pos < 32` / `pos >= 32` — output positions within a region are
+    distinct, so the sums reproduce the static kernels' OR chains."""
+    d, N = x_ref.shape
+    R, T = pos_ref.shape[1], pos_ref.shape[2]
+    M = reg_ref.shape[1]
+    K = T // d
+    # bit planes, (T, N): plane t = i*K + j holds bit j of dimension i
+    planes = [((x_ref[i, :][None, :] >>
+                jax.lax.broadcasted_iota(jnp.int32, (K, 1), 0)) & 1)
+              for i in range(d)]
+    bits = jnp.concatenate(planes, axis=0)
+    tidx = jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0)
+    # region code from the M (possibly sentinel) region-bit indexes
+    r = jnp.zeros((N,), jnp.int32)
+    for m in range(M):
+        bm = jnp.where(tidx == reg_ref[0, m], bits, 0).sum(axis=0)
+        r = r | (bm << np.int32(m))
+    # per-region variable-shift placement, merged by region mask
+    hi = jnp.zeros((N,), jnp.int32)
+    lo = jnp.zeros_like(hi)
+    for rr in range(R):
+        prr = pos_ref[0, rr, :][:, None]              # (T, 1) traced
+        lo_r = jnp.where(prr < 32,
+                         bits << jnp.minimum(prr, 31), 0).sum(axis=0)
+        hi_r = jnp.where(prr >= 32,
+                         bits << jnp.clip(prr - 32, 0, 31), 0).sum(axis=0)
+        sel = r == rr
+        lo = lo | jnp.where(sel, lo_r, 0)
+        hi = hi | jnp.where(sel, hi_r, 0)
+    out_ref[0, 0, :] = hi
+    out_ref[0, 1, :] = lo
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def sfc_encode_pool_dn(x_dn, pos, reg, block_n: int = 2048,
+                       interpret: bool = False):
+    """x_dn: (d, n) int32 with n % block_n == 0; pos: (P, R, T) int32 and
+    reg: (P, M) int32 from `core.curve.pack_curve_pool` -> (P, 2, n) int32
+    Z64 — every candidate curve's encode of the same points, one launch."""
+    d, n = x_dn.shape
+    P, R, T = pos.shape
+    M = reg.shape[1]
+    assert n % block_n == 0, "caller pads n to a block multiple"
+    return pl.pallas_call(
+        _encode_pool_kernel,
+        grid=(P, n // block_n),
+        in_specs=[pl.BlockSpec((d, block_n), lambda p, i: (0, i)),
+                  pl.BlockSpec((1, R, T), lambda p, i: (p, 0, 0)),
+                  pl.BlockSpec((1, M), lambda p, i: (p, 0))],
+        out_specs=pl.BlockSpec((1, 2, block_n), lambda p, i: (p, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((P, 2, n), jnp.int32),
+        interpret=interpret,
+    )(x_dn, pos, reg)

@@ -4,9 +4,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ...core.curve import as_curve
-from .kernel import sfc_encode_dn
-from .ref import sfc_encode_ref
+from ...core.curve import CurvePool, as_curve, pack_curve_pool
+from .kernel import sfc_encode_dn, sfc_encode_pool_dn
+from .ref import sfc_encode_pool_ref, sfc_encode_ref
 
 
 def sfc_encode(x, curve, *, backend: str = "xla",
@@ -21,3 +21,22 @@ def sfc_encode(x, curve, *, backend: str = "xla",
     x_dn = jnp.pad(x, ((0, pad), (0, 0))).T  # (d, n+pad)
     z = sfc_encode_dn(x_dn, curve, block_n=block_n, interpret=interpret)
     return z.T[:n]
+
+
+def sfc_encode_pool(x, curves, *, backend: str = "xla",
+                    block_n: int = 2048, interpret: bool = False):
+    """Candidate-batched encode: x (n, d) int32, `curves` a `CurvePool`
+    or a list of `MonotonicCurve`s sharing (d, K) -> (P, n, 2) int32 Z64.
+    One launch encodes the same points under every curve (the SMBO pool),
+    with the curve layouts as data along a leading grid axis."""
+    pool = curves if isinstance(curves, CurvePool) else pack_curve_pool(
+        [as_curve(c) for c in curves])
+    if backend == "xla":
+        return sfc_encode_pool_ref(x, pool)
+    n, d = x.shape
+    pad = (-n) % block_n
+    x_dn = jnp.pad(x, ((0, pad), (0, 0))).T  # (d, n+pad)
+    z = sfc_encode_pool_dn(x_dn, jnp.asarray(pool.pos),
+                           jnp.asarray(pool.reg), block_n=block_n,
+                           interpret=interpret)
+    return jnp.transpose(z, (0, 2, 1))[:, :n]

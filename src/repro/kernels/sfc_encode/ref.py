@@ -1,10 +1,23 @@
-"""Pure-jnp oracle for the SFC encode kernels (any curve kind)."""
+"""Pure-jnp oracles for the SFC encode kernels (any curve kind)."""
 from __future__ import annotations
 
-from ...core.curve import as_curve
+import jax
+
+from ...core.curve import CurvePool, as_curve, pack_curve_pool
+from ...core.sfc import encode_z64_dyn
 
 
 def sfc_encode_ref(x, curve):
     """x: (n, d) int32 (unsigned semantics) -> (n, 2) int32 Z64 (hi, lo).
     `curve` is any `MonotonicCurve` (or a legacy `Theta`)."""
     return as_curve(curve).encode_jax(x)
+
+
+def sfc_encode_pool_ref(x, pool):
+    """Candidate-batched oracle: x (n, d) int32 and a `CurvePool` (or a
+    list of curves, packed here) -> (P, n, 2) int32 Z64 — row p is curve
+    p's encode of every point (vmapped data-driven encode)."""
+    if not isinstance(pool, CurvePool):
+        pool = pack_curve_pool(pool)
+    return jax.vmap(lambda pos, reg: encode_z64_dyn(x, pos, reg))(
+        pool.pos, pool.reg)

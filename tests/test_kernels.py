@@ -5,11 +5,12 @@ import numpy as np
 import pytest
 
 from repro.core import zorder64 as z64
+from repro.core.curve import pack_curve_pool, random_curve
 from repro.core.sfc import encode_np
 from repro.core.theta import default_K, random_theta, zorder
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import mha_ref
-from repro.kernels.sfc_encode.ops import sfc_encode
+from repro.kernels.sfc_encode.ops import sfc_encode, sfc_encode_pool
 from repro.kernels.window_filter.ops import window_filter, window_match
 from repro.kernels.window_filter.ref import window_filter_ref, window_match_ref
 
@@ -45,6 +46,34 @@ def test_sfc_encode_block_shapes(block_n):
     got = np.asarray(sfc_encode(xi, theta, backend="pallas",
                                 block_n=block_n, interpret=True))
     np.testing.assert_array_equal(z64.z64_to_u64(got), encode_np(xs, theta))
+
+
+@pytest.mark.parametrize("d,K", [(2, 16), (3, 12)])
+def test_sfc_encode_pool_matches_per_curve_oracle(d, K):
+    """Candidate-batched encode: Pallas (interpret) == pooled jnp ref ==
+    every curve's own per-curve oracles, over a mixed global/piecewise
+    pool (the SMBO candidate set shape)."""
+    rng = np.random.default_rng(d * 100 + K)
+    curves = [random_curve(np.random.default_rng(i), d, K)
+              for i in range(3)]
+    curves += [random_curve(np.random.default_rng(40 + i), d, K,
+                            family="piecewise", depth=1 + i % 2)
+               for i in range(3)]
+    xs = rng.integers(0, 2**K, size=(900, d), dtype=np.uint64)
+    xi = jnp.asarray(xs.astype(np.uint32).view(np.int32))
+    ref = np.asarray(sfc_encode_pool(xi, curves, backend="xla"))
+    got = np.asarray(sfc_encode_pool(xi, curves, backend="pallas",
+                                     block_n=256, interpret=True))
+    np.testing.assert_array_equal(got, ref)
+    for p, c in enumerate(curves):
+        np.testing.assert_array_equal(
+            ref[p], np.asarray(sfc_encode(xi, c, backend="xla")))
+        np.testing.assert_array_equal(z64.z64_to_u64(ref[p]),
+                                      c.encode_np(xs))
+    # a pre-packed CurvePool is accepted as-is
+    pool = pack_curve_pool(curves)
+    np.testing.assert_array_equal(
+        np.asarray(sfc_encode_pool(xi, pool, backend="xla")), ref)
 
 
 # ---------------------------------------------------------------------------

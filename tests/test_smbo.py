@@ -1,12 +1,28 @@
-"""SMBO learner: surrogate sanity + end-to-end improvement over z-order."""
+"""SMBO learner: surrogate sanity, end-to-end improvement over z-order,
+pooled-evaluator cost equality, and same-seed reproducibility."""
 import numpy as np
+import pytest
 
-from repro.core.cost import evaluate_theta
+from repro.core.cost import evaluate_curve, evaluate_pool, evaluate_theta
+from repro.core.curve import random_curve
 from repro.core.index import IndexConfig
 from repro.core.smbo import expected_improvement, learn_sfc
 from repro.core.surrogate import RandomForest
 from repro.core.theta import default_K, zorder
 from repro.data.workload import make_workload
+
+
+def _toy_problem(seed=0, n=1500, n_q=20, d=2, K=10):
+    rng = np.random.default_rng(seed)
+    data = np.unique(
+        rng.integers(0, 2**K, size=(n, d), dtype=np.uint64), axis=0)
+    dom = 2**K - 1
+    ctr = data[rng.integers(0, len(data), n_q)].astype(np.float64)
+    w = rng.integers(1, dom // 4, size=(n_q, d)).astype(np.float64)
+    Ls = np.clip(ctr - w / 2, 0, dom).astype(np.uint64)
+    Us = np.clip(ctr + w / 2, 0, dom).astype(np.uint64)
+    cfg = IndexConfig(paging="heuristic", page_bytes=1024)
+    return data, Ls, Us, cfg, K
 
 
 def test_random_forest_fits_simple_function():
@@ -47,3 +63,91 @@ def test_smbo_beats_zorder_on_anisotropic_workload():
     y_z = evaluate_theta(zorder(d, K), data, Ls, Us, cfg, K)
     assert res.y_best < y_z  # learned curve strictly better than z-order
     assert res.history[-1][1] <= res.history[0][1]
+
+
+# ---------------------------------------------------------------------------
+# pooled evaluation: cost equality to the last ulp
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family,depth", [("global", 1), ("piecewise", 2)])
+def test_evaluate_pool_matches_per_candidate_to_last_ulp(family, depth):
+    """`evaluate_pool` (both engines) returns bit-identical costs to
+    `evaluate_curve` under every evaluator, for a mixed candidate pool."""
+    data, Ls, Us, cfg, K = _toy_problem(seed=3)
+    d = data.shape[1]
+    curves = [random_curve(np.random.default_rng(i), d, K, family=family,
+                           depth=depth) for i in range(5)]
+    want = np.array([evaluate_curve(c, data, Ls, Us, cfg, K,
+                                    evaluator="legacy") for c in curves])
+    batched = np.array([evaluate_curve(c, data, Ls, Us, cfg, K,
+                                       evaluator="batched") for c in curves])
+    pool_np = evaluate_pool(curves, data, Ls, Us, cfg, K, engine="np")
+    pool_jax = evaluate_pool(curves, data, Ls, Us, cfg, K, engine="jax")
+    np.testing.assert_array_equal(batched, want)
+    np.testing.assert_array_equal(pool_np, want)
+    np.testing.assert_array_equal(pool_jax, want)
+
+
+@pytest.mark.parametrize("family,depth", [("global", 1), ("piecewise", 2)])
+def test_learn_sfc_evaluators_agree_to_last_ulp(family, depth):
+    """The full SMBO loop lands on identical curves, costs, and history
+    regardless of evaluator (pooled device path included)."""
+    data, Ls, Us, cfg, K = _toy_problem(seed=5, n=1000, n_q=12)
+    kw = dict(K=K, cfg=cfg, space=family, depth=depth, max_iters=2,
+              n_init=4, pool_size=6, evals_per_iter=2, seed=11)
+    base = learn_sfc(data, Ls, Us, evaluator="legacy", **kw)
+    for ev in ("batched", "pooled-np", "pooled-jax", "pooled"):
+        res = learn_sfc(data, Ls, Us, evaluator=ev, **kw)
+        assert res.y_best == base.y_best
+        assert res.curve_best == base.curve_best
+        assert res.history == base.history
+        assert [y for _, y in res.evaluated] == \
+               [y for _, y in base.evaluated]
+
+
+def test_learn_sfc_same_seed_is_bit_reproducible():
+    data, Ls, Us, cfg, K = _toy_problem(seed=9, n=1000, n_q=12)
+    kw = dict(K=K, cfg=cfg, max_iters=2, n_init=4, pool_size=6,
+              evals_per_iter=2, seed=17)
+    a = learn_sfc(data, Ls, Us, **kw)
+    b = learn_sfc(data, Ls, Us, **kw)
+    assert a.curve_best == b.curve_best
+    assert a.y_best == b.y_best
+    assert a.history == b.history
+    assert [(c, y) for c, y in a.evaluated] == \
+           [(c, y) for c, y in b.evaluated]
+
+
+def test_learn_sfc_rejects_unknown_evaluator():
+    data, Ls, Us, cfg, K = _toy_problem(seed=1, n=400, n_q=4)
+    with pytest.raises(ValueError, match="unknown evaluator"):
+        learn_sfc(data, Ls, Us, K=K, cfg=cfg, evaluator="warp-drive")
+
+
+def test_database_fit_smbo_knobs_and_progress_gauges():
+    """`Database.fit(pool=, iters=, seed=)` threads the SMBO knobs through
+    and surfaces fit progress via the smbo obs gauges."""
+    from repro import obs
+    from repro.api import Database
+
+    data, Ls, Us, cfg, K = _toy_problem(seed=2, n=1200, n_q=10)
+    obs.reset()
+    obs.enable()
+    try:
+        db = Database.fit(data, workload=(Ls, Us), cfg=cfg, K=K,
+                          pool=6, iters=2, seed=21)
+        assert db.fit_result is not None
+        assert len(db.fit_result.history) == 3        # iters=2 -> 0,1,2
+        metrics = db.stats()["metrics"]
+        assert metrics['smbo.best_cost{space="global"}'] == \
+               db.fit_result.y_best
+        assert metrics['smbo.iteration{space="global"}'] == 2.0
+        assert metrics['smbo.evaluations{space="global"}'] > 0
+    finally:
+        obs.disable()
+        obs.reset()
+    # same knobs + same seed -> the very same learned curve
+    db2 = Database.fit(data, workload=(Ls, Us), cfg=cfg, K=K,
+                       pool=6, iters=2, seed=21)
+    assert db2.index.curve == db.index.curve
