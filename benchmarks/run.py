@@ -40,8 +40,9 @@ def stamp_envelopes(pattern: str = "BENCH_*.json") -> list:
 
 def main() -> None:
     from . import (bench_ablation, bench_learning_size, bench_query_perf,
-                   bench_selectivity_scale_aspect, bench_serve_engine,
-                   bench_serving, bench_smbo, bench_split_paging)
+                   bench_scale, bench_selectivity_scale_aspect,
+                   bench_serve_engine, bench_serving, bench_smbo,
+                   bench_split_paging)
     suites = [
         ("fig6_query_perf", bench_query_perf.run),
         ("fig7_8_9_sel_scale_aspect", bench_selectivity_scale_aspect.run),
@@ -49,9 +50,10 @@ def main() -> None:
         ("tab3_4_5_split_paging", bench_split_paging.run),
         ("fig11_12_tab6_7_learning_size", bench_learning_size.run),
         ("serve_engine", bench_serve_engine.run),
-        # these two write their own envelopes — stamp_envelopes() skips them
+        # these three write their own envelopes — stamp_envelopes() skips them
         ("serving", bench_serving.run),
         ("smbo", bench_smbo.run),
+        ("scale", bench_scale.run),
     ]
     t_all = time.time()
     failures = []

@@ -1,0 +1,91 @@
+"""Schema gate for the out-of-core scale benchmark artifact
+(CI ``scale-smoke``).
+
+Validates BENCH_scale.json: envelope, a build section whose peak-RSS
+delta respects its out-of-core bound (and, on full runs, whose bound is
+itself far below the dataset size — otherwise the assertion proves
+nothing), per-kind serving rates that actually ran, consistent
+page-group-cache accounting (hits + misses == lookups, resident bytes
+within budget), and a passing bit-identical exactness gate — so a
+storage regression (RSS blowup, cache leak, store engine drifting from
+the in-memory oracle) fails the push, not a later debugging session.
+
+    PYTHONPATH=src python benchmarks/validate_scale.py \
+        [--report BENCH_scale.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+REQUIRED_KEYS = ("schema", "host", "jax_version", "config", "build",
+                 "serve", "exactness")
+QPS_KEYS = ("count_qps", "range_qps", "point_qps", "knn_qps")
+
+
+def validate_build(doc: dict) -> None:
+    b, cfg = doc["build"], doc["config"]
+    for k in ("seconds", "rows_per_s", "rss_delta_mb", "rss_bound_mb",
+              "rss_bounded", "dataset_mb"):
+        assert k in b, f"build section missing {k!r}"
+    assert b["rss_bounded"] is True, "build did not assert its RSS bound"
+    assert b["rss_delta_mb"] <= b["rss_bound_mb"], (
+        f"peak RSS delta {b['rss_delta_mb']} MB over the "
+        f"{b['rss_bound_mb']} MB bound")
+    assert b["seconds"] > 0 and b["rows_per_s"] > 0, "degenerate build timing"
+    if not cfg.get("smoke", False):
+        assert b["rss_bound_mb"] < b["dataset_mb"], (
+            f"RSS bound {b['rss_bound_mb']} MB is not below the "
+            f"{b['dataset_mb']} MB dataset — the out-of-core claim is vacuous")
+        assert cfg["n"] >= 10_000_000, (
+            f"full run must build >= 10M rows, got {cfg['n']}")
+
+
+def validate_serve(doc: dict) -> None:
+    s = doc["serve"]
+    for k in QPS_KEYS:
+        assert s.get(k, 0) > 0, f"degenerate serving rate: {k}={s.get(k)}"
+    assert s["segment_rows"] == doc["config"]["n"], (
+        f"segment holds {s['segment_rows']} rows, build streamed "
+        f"{doc['config']['n']}")
+    c = s["cache"]
+    assert c["accounting_ok"] is True
+    assert c["hits"] + c["misses"] == c["lookups"], (
+        f"cache accounting leak: {c['hits']} + {c['misses']} != "
+        f"{c['lookups']}")
+    assert c["resident_bytes"] <= c["budget_bytes"], (
+        f"cache resident {c['resident_bytes']} B over the "
+        f"{c['budget_bytes']} B budget")
+    assert c["lookups"] > 0 and c["misses"] > 0, "cache never exercised"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default="BENCH_scale.json")
+    args = ap.parse_args()
+
+    with open(args.report) as f:
+        doc = json.load(f)
+    missing = [k for k in REQUIRED_KEYS if k not in doc]
+    assert not missing, f"{args.report} missing keys: {missing}"
+    assert doc["schema"] == 1, f"unknown schema {doc['schema']!r}"
+
+    validate_build(doc)
+    validate_serve(doc)
+
+    ex = doc["exactness"]
+    assert ex["bit_identical"] is True and ex["arrays_checked"] > 0, (
+        f"exactness gate not demonstrated: {ex}")
+    assert set(ex["kinds_checked"]) >= {"count", "range", "point"}, (
+        f"exactness must cover every query kind: {ex['kinds_checked']}")
+
+    b, s = doc["build"], doc["serve"]
+    print(f"{args.report}: {doc['config']['n']:,}-row build in "
+          f"{b['seconds']}s (peak RSS delta {b['rss_delta_mb']} MB <= "
+          f"{b['rss_bound_mb']} MB bound, dataset {b['dataset_mb']} MB); "
+          f"count {s['count_qps']} q/s; {ex['arrays_checked']} result "
+          f"arrays bit-identical ✓")
+
+
+if __name__ == "__main__":
+    main()

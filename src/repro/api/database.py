@@ -115,6 +115,7 @@ class Database:
         self.workload = workload
         self.rebuild_pending = False
         self.fit_result = None          # SMBOResult when θ was learned
+        self._segment = None            # repro.store.Segment when attached
         self._engines = {}
         self._active = None
         self.executor = Executor(self)  # shape-bucketed compiled-fn cache
@@ -178,6 +179,34 @@ class Database:
         db = cls(index, policy=policy, workload=workload)
         db.fit_result = fit_result
         return db
+
+    @classmethod
+    def from_segment(cls, segment, *, verify: str = "full",
+                     cfg: IndexConfig = None, policy: RebuildPolicy = None,
+                     workload=None) -> "Database":
+        """Attach to an on-disk segment (`repro.store`): the row store is
+        memory-mapped, only page metadata is loaded, and queries serve
+        through the regular engine surface — the CPU engine walks the
+        memmap-backed index directly, and ``db.engine("store")`` adds the
+        device path with an LRU of resident page groups.
+
+        `segment` is a segment directory path (built by
+        `repro.store.build_segment` / `write_segment_from_index`) or an
+        already-opened `repro.store.Segment`; `verify` forwards to
+        `open_segment` (``"full"`` checksums the row store too).
+        """
+        from ..store import open_segment          # lazy: store imports api
+        from ..store import engine as _           # noqa: F401 — registers
+        if isinstance(segment, str):
+            segment = open_segment(segment, verify=verify)
+        db = cls(segment.as_index(cfg), policy=policy, workload=workload)
+        db._segment = segment
+        return db
+
+    @property
+    def segment(self):
+        """The attached `repro.store.Segment` (None on in-memory builds)."""
+        return self._segment
 
     @property
     def curve(self) -> MonotonicCurve:
@@ -339,6 +368,14 @@ class Database:
         self.rebuild_pending = False
         for eng in self._engines.values():
             eng.invalidate()
+        if self._segment is not None:
+            # the rebuilt index is in-memory; the on-disk snapshot no
+            # longer backs it, so detach it (and the store engine with it
+            # — persist again via repro.store.write_segment_from_index)
+            self._segment = None
+            dead = self._engines.pop("store", None)
+            if dead is not None and self._active == "store":
+                self._active = None
         return self
 
     # ------------------------------------------------------------------

@@ -71,6 +71,8 @@ def engine_capabilities() -> dict:
 
 
 def make_engine(name: str, db, config: EngineConfig = None):
+    if name == "store" and name not in _ENGINES:
+        from ..store import engine as _store_engine  # noqa: F401 — registers
     if name not in _ENGINES:
         raise KeyError(f"unknown engine {name!r}; registered: {engine_names()}")
     return _ENGINES[name](db, config or EngineConfig())
@@ -258,6 +260,21 @@ class _DeviceEngine(BaseEngine):
         if self._host is None:
             self.sync()
         return max(1, int(self._host.page_size.sum()))
+
+    def live_row_total(self) -> int:
+        """Total live rows in the packed arrays (kNN truncation bound)."""
+        if self._host is None:
+            self.sync()
+        return int(np.asarray(self._host.page_size, dtype=np.int64).sum())
+
+    def knn_radius(self, centers, k: int, metric: str = "l2") -> list:
+        """Per-center covering-box half-widths for exact kNN (ring-seeded
+        over the packed host arrays; see `core.serve.knn_seed_radius`)."""
+        from ..core.serve import knn_seed_radius
+        if self._host is None:
+            self.sync()
+        return knn_seed_radius(self._host, self.db.index.curve, centers, k,
+                               metric)
 
     def _build_qfn(self, max_cand: int):
         raise NotImplementedError

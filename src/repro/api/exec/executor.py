@@ -382,11 +382,9 @@ class Executor:
             return KnnResult(neighbors=rows, offsets=offsets, dists=dd,
                              k=k, metric=metric, engine=name, epoch=epoch,
                              stats=stats, plan=plan)
-        from ...core.serve import knn_seed_radius   # lazy: imports jax
         eng.sync(eng.cfg.on_stale)
-        radius = knn_seed_radius(eng._host, db.index.curve, centers, k,
-                                 metric)
-        total = int(np.asarray(eng._host.page_size).sum())
+        radius = eng.knn_radius(centers, k, metric)
+        total = eng.live_row_total()
         kk = min(k, total)
         if kk <= 0:
             rows, offsets, dd = _concat_rows([[]] * len(centers), db.d,

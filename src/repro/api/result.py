@@ -44,6 +44,10 @@ class EngineConfig:
     cpu_fallback: bool = True  # final exactness net if escalation is exhausted
     on_stale: str = "refresh"  # when device arrays predate the DeltaStore
                                #   epoch: 'refresh' | 'error' | 'serve_stale'
+    group_pages: int = None    # store engine: pages per cached device block
+                               #   (default 64)
+    cache_bytes: int = None    # store engine: page-group cache budget —
+                               #   a hard resident-bytes bound (default 256MB)
 
 
 @dataclasses.dataclass

@@ -16,7 +16,6 @@ import dataclasses
 import numpy as np
 
 from ..core.index import IndexConfig, LMSFCIndex
-from ..core.query import query_count
 from ..core.theta import default_K
 from ..core.smbo import learn_sfc
 
@@ -46,35 +45,78 @@ def synth_corpus(n_docs: int, vocab: int, max_len: int, seed: int = 0):
 
 
 class IndexedDataset:
-    """Metadata index + window-query sample selection."""
+    """Metadata index + window-query sample selection.
+
+    Selection is served through the `Database` Range query path (exact by
+    construction on every engine), not a full metadata scan: the window's
+    matching *unique* metadata rows come back from the index, and a
+    one-time curve-order permutation of the corpus maps each row to its
+    doc ids with two binary searches — O(hits · log n) per select instead
+    of the old O(n · d) mask sweep (which "used" the index only inside an
+    ``assert``, i.e. not at all under ``python -O``).
+
+    Pass `database=` to serve selections from an existing store-backed
+    `Database` (`Database.from_segment`) whose index holds this corpus's
+    unique metadata rows; by default an in-memory Database is built over
+    them.  ``verify_selects=True`` cross-checks every select against the
+    brute-force metadata mask and raises `RuntimeError` on any mismatch —
+    a real guard (asserts are stripped under ``-O``) for debugging, off
+    by default because it reintroduces the full scan it exists to audit.
+    """
 
     def __init__(self, docs, meta01, seed: int = 0, learn_curve: bool = False,
-                 workload=None):
+                 workload=None, database=None, verify_selects: bool = False):
         self.docs = docs
         d = meta01.shape[1]
         self.K = min(16, default_K(d))
         self.meta_int = np.floor(meta01 * (2**self.K - 1)).astype(np.uint64)
-        theta = None
-        if learn_curve and workload is not None:
-            Ls, Us = workload
-            res = learn_sfc(self.meta_int, Ls, Us, K=self.K,
-                            max_iters=3, n_init=4, evals_per_iter=2, seed=seed)
-            theta = res.theta_best
-        self.index = LMSFCIndex.build(
-            np.unique(self.meta_int, axis=0), theta=theta,
-            cfg=IndexConfig(paging="heuristic", page_bytes=2048), K=self.K)
+        self.verify_selects = verify_selects
+        from ..api.database import Database      # lazy: api imports core
+        if database is not None:
+            self.db = database
+            self.index = database.index
+        else:
+            theta = None
+            if learn_curve and workload is not None:
+                Ls, Us = workload
+                res = learn_sfc(self.meta_int, Ls, Us, K=self.K,
+                                max_iters=3, n_init=4, evals_per_iter=2,
+                                seed=seed)
+                theta = res.theta_best
+            self.index = LMSFCIndex.build(
+                np.unique(self.meta_int, axis=0), theta=theta,
+                cfg=IndexConfig(paging="heuristic", page_bytes=2048),
+                K=self.K)
+            self.db = Database(self.index)
+        # curve-order permutation of the corpus: doc ids for any returned
+        # metadata row are one contiguous slice of `_order` (the curve is
+        # injective over the K-bit grid, so equal z <=> equal row)
+        self._doc_z = self.index.curve.encode_np(self.meta_int)
+        self._order = np.argsort(self._doc_z, kind="stable")
+        self._z_sorted = self._doc_z[self._order]
         self.rng = np.random.default_rng(seed)
 
     def select(self, lo01, hi01) -> np.ndarray:
-        """Doc ids whose metadata falls in the window (exact)."""
+        """Doc ids whose metadata falls in the window (exact, ascending)."""
+        from ..api.queries import Range          # lazy: api imports core
         lo = np.floor(np.asarray(lo01) * (2**self.K - 1)).astype(np.uint64)
         hi = np.floor(np.asarray(hi01) * (2**self.K - 1)).astype(np.uint64)
-        m = np.all((self.meta_int >= lo) & (self.meta_int <= hi), axis=1)
-        # index-accelerated count must agree with the exact mask (guard)
-        st = query_count(self.index, lo, hi)
-        assert st.result == int(np.all(
-            (self.index.xs >= lo) & (self.index.xs <= hi), axis=1).sum())
-        return np.nonzero(m)[0]
+        res = self.db.query(Range(lo[None], hi[None]))
+        z = self.index.curve.encode_np(res.rows)
+        left = np.searchsorted(self._z_sorted, z, side="left")
+        right = np.searchsorted(self._z_sorted, z, side="right")
+        ids = (np.sort(np.concatenate(
+            [self._order[l:r] for l, r in zip(left, right)]))
+            if len(z) else np.empty(0, dtype=np.int64))
+        if self.verify_selects:
+            m = np.all((self.meta_int >= lo) & (self.meta_int <= hi), axis=1)
+            want = np.nonzero(m)[0]
+            if not np.array_equal(ids, want):
+                raise RuntimeError(
+                    f"IndexedDataset.select mismatch: index path returned "
+                    f"{len(ids)} doc ids, exact mask {len(want)} "
+                    f"(window {lo.tolist()}..{hi.tolist()})")
+        return ids
 
 
 class TokenBatcher:

@@ -77,3 +77,80 @@ DATASETS = {"osm": make_osm, "nyc": make_nyc, "stock": make_stock}
 
 def make_dataset(name: str, n: int, seed: int = 0) -> np.ndarray:
     return DATASETS[name](n, seed)
+
+
+# ---------------------------------------------------------------------------
+# chunked generation (out-of-core builds: repro.store, bench_scale)
+# ---------------------------------------------------------------------------
+
+_SM_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_SM_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_SM_M2 = np.uint64(0x94D049BB133111EB)
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer (uint64 in/out, wrapping)."""
+    x = (np.asarray(x, dtype=np.uint64) + _SM_GAMMA)
+    x = (x ^ (x >> np.uint64(30))) * _SM_M1
+    x = (x ^ (x >> np.uint64(27))) * _SM_M2
+    return x ^ (x >> np.uint64(31))
+
+
+def iter_chunks(n: int, chunk: int, seed: int = 0, *, d: int = 3,
+                K: int = None):
+    """Yield `n` clustered, duplicate-free rows in (at most) `chunk`-row
+    pieces, deterministically — the streaming producer for 10M+-row
+    `repro.store` builds and `bench_scale.py`, where materializing the
+    dataset is exactly what we must not do.
+
+    Every row is a pure function of ``(seed, row id)`` (splitmix64
+    hashing), so the stream is independent of `chunk`: any chunking of
+    the same ``(n, seed, d, K)`` yields the same rows in the same order,
+    and a subsampled prefix can serve as an in-memory oracle for the
+    full build.  Duplicate-freedom is by construction: each dimension's
+    low ``b = ceil(log2(n)/d)`` bits carry a disjoint slice of the row
+    id, while the high ``K - b`` bits are OSM-like clustered noise (64
+    Pareto-ish weighted centers + triangular jitter).
+    """
+    if n < 1 or chunk < 1:
+        raise ValueError(f"need n >= 1 and chunk >= 1; got n={n}, "
+                         f"chunk={chunk}")
+    K = K or default_K(d)
+    b = -(-max(int(n) - 1, 1).bit_length() // d)
+    if b >= K:
+        raise ValueError(f"n={n} rows need {b} id bits/dim but K={K} "
+                         f"leaves no room for structure; raise K or d")
+    top = K - b
+    n_clusters = 64
+    # scalar seed mixes wrap in python ints (numpy warns on scalar wrap)
+    mask64 = (1 << 64) - 1
+    seed_c = np.uint64((int(seed) * 0xD1342543DE82EF95) & mask64)
+    seed_h = np.uint64((int(seed) * int(_SM_M1)) & mask64)
+    base = _splitmix64(seed_c + np.arange(n_clusters * d, dtype=np.uint64))
+    centers = (base % (np.uint64(1) << np.uint64(top))).reshape(
+        n_clusters, d)
+    # Pareto-ish cluster weights via a power-law rank map (deterministic)
+    rank = _splitmix64(np.uint64(seed) + np.arange(n_clusters,
+                                                   dtype=np.uint64))
+    order = np.argsort(rank, kind="stable")
+    width = np.uint64(max(1, (1 << top) // 16))
+    lim = np.int64(1 << top) - 1
+    bmask = (np.uint64(1) << np.uint64(b)) - np.uint64(1)
+    for s in range(0, int(n), int(chunk)):
+        gid = np.arange(s, min(s + chunk, n), dtype=np.uint64)
+        h = _splitmix64(gid ^ seed_h)
+        # power-law cluster pick: square a uniform rank so low ranks
+        # (heavy clusters) dominate
+        u = (h >> np.uint64(40)).astype(np.float64) / float(1 << 24)
+        cid = order[np.minimum((u * u * n_clusters).astype(np.int64),
+                               n_clusters - 1)]
+        out = np.empty((len(gid), d), dtype=np.uint64)
+        for i in range(d):
+            hi = _splitmix64(h + np.uint64((i * int(_SM_GAMMA)) & mask64))
+            off = ((hi % width).astype(np.int64)
+                   + ((hi >> np.uint64(20)) % width).astype(np.int64)
+                   - np.int64(width))
+            topv = np.clip(centers[cid, i].astype(np.int64) + off, 0, lim)
+            low = (gid >> np.uint64(i * b)) & bmask
+            out[:, i] = (topv.astype(np.uint64) << np.uint64(b)) | low
+        yield out

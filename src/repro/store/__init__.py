@@ -1,0 +1,53 @@
+"""repro.store — out-of-core storage: external-sort builds, memory-mapped
+segments, and a device-resident page-group cache.
+
+Everything before this package assumed the dataset fits one in-memory
+pack; `repro.store` is the layer that takes the LMSFC reproduction to the
+10M–100M-row scale the learned-index literature benchmarks at (Liu et
+al. 2024; Flood), without ever materializing the full dataset in memory:
+
+  build.py    — chunked build pipeline: consume row chunks (a seeded
+                generator or `.npy` shards), encode curve keys per chunk,
+                external-sort by z64 key (k-way merge of sorted spill
+                runs on disk), and pack pages incrementally.  The build
+                touches no device arrays and holds O(chunk + merge
+                window) rows at a time, which is what makes the peak-RSS
+                bound in `bench_scale.py` sharp (measured as a delta
+                over the post-import baseline).
+  segment.py  — the on-disk segment format: raw packed arrays + a JSON
+                manifest (schema version, curve spec, per-array CRC32s).
+                `open_segment` memory-maps the row store and loads only
+                page *metadata* into memory; `Segment.as_index()` yields
+                an `LMSFCIndex` view the CPU engine (and the executor's
+                exactness net) serves directly — reads page on demand.
+  cache.py    — `PageGroupCache`: an LRU of device-resident page groups
+                with obs-integrated hit/miss/eviction counters and a
+                resident-bytes gauge, feeding the `store` engine.
+  engine.py   — the `store` execution engine (`db.engine("store")`):
+                per batch it selects the page groups the queries'
+                z-candidate ranges touch, assembles them from the cache,
+                and runs the standard serving kernels on that subset —
+                exact by the same superset/prune argument the in-memory
+                engines use.
+
+Quickstart::
+
+    from repro.store import build_segment, open_segment
+    from repro.data.synth import iter_chunks
+    from repro.api import Database
+
+    seg = build_segment(iter_chunks(10_000_000, 500_000, seed=0, d=3),
+                        "seg_dir")
+    db = Database.from_segment("seg_dir")      # cpu engine: memmap-backed
+    db.engine("store")                          # cached device page groups
+    db.query(Count(Ls, Us))                     # exact, out-of-core
+"""
+from .build import build_segment, iter_npy_shards
+from .segment import (Segment, SegmentWriter, StoreCorruptionError,
+                      open_segment, write_segment_from_index)
+
+__all__ = [
+    "build_segment", "iter_npy_shards",
+    "Segment", "SegmentWriter", "StoreCorruptionError", "open_segment",
+    "write_segment_from_index",
+]

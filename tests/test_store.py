@@ -1,0 +1,348 @@
+"""The `repro.store` out-of-core subsystem: external-sort builds, segment
+durability (manifest round-trip, checksum corruption), page-group cache
+accounting, the `store` engine's bit-identity with an in-memory oracle on
+every query kind, staleness semantics, and the chunked generator the
+scale bench streams from."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (Count, Database, EngineConfig, Knn, Point, Range,
+                       StaleServingError)
+from repro.core.index import IndexConfig
+from repro.core.theta import default_K
+from repro.data.synth import iter_chunks
+from repro.data.workload import make_workload
+from repro.store import (StoreCorruptionError, build_segment, iter_npy_shards,
+                         open_segment, write_segment_from_index)
+from repro.store.cache import PageGroupCache
+
+N, D, CHUNK = 20_000, 3, 3_000
+
+
+@pytest.fixture(scope="module")
+def seg_path(tmp_path_factory):
+    """One segment built chunk-by-chunk, shared by the read-only tests."""
+    path = str(tmp_path_factory.mktemp("store") / "seg")
+    build_segment(iter_chunks(N, CHUNK, seed=3, d=D), path, page_rows=128)
+    return path
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    """In-memory Database over the same rows, *different* paging — parity
+    must hold despite disagreeing page boundaries."""
+    rows = np.concatenate(list(iter_chunks(N, CHUNK, seed=3, d=D)))
+    db = Database.fit(rows, K=default_K(D), learn=False,
+                      cfg=IndexConfig(paging="heuristic", page_bytes=4096))
+    return db, rows
+
+
+def _workload(rows, n_q=12, seed=11):
+    return make_workload(rows, n_q, seed=seed, K=default_K(D))
+
+
+# ---------------------------------------------------------------------------
+# chunked generator: determinism, chunk-invariance, duplicate-freedom
+# ---------------------------------------------------------------------------
+
+
+def test_iter_chunks_chunk_invariant_and_duplicate_free():
+    a = np.concatenate(list(iter_chunks(N, CHUNK, seed=3, d=D)))
+    b = np.concatenate(list(iter_chunks(N, 777, seed=3, d=D)))
+    np.testing.assert_array_equal(a, b)  # chunking never changes the stream
+    assert len(np.unique(a, axis=0)) == len(a)
+    c = np.concatenate(list(iter_chunks(N, CHUNK, seed=4, d=D)))
+    assert not np.array_equal(a, c)      # the seed actually matters
+    assert a.dtype == np.uint64 and a.shape == (N, D)
+    assert int(a.max()) < 2 ** default_K(D)
+
+
+def test_iter_chunks_rejects_degenerate_args():
+    with pytest.raises(ValueError):
+        next(iter_chunks(0, 10))
+    with pytest.raises(ValueError):
+        next(iter_chunks(10, 0))
+    with pytest.raises(ValueError):
+        next(iter_chunks(1 << 30, 1024, d=2, K=8))  # ids don't fit K bits
+
+
+# ---------------------------------------------------------------------------
+# durability: manifest round-trip, corruption detection
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_round_trip_bit_identical(seg_path, tmp_path):
+    seg = open_segment(seg_path, verify="full")
+    assert seg.n == N and seg.d == D
+    man = seg.manifest
+    assert man["format"] == "repro.store.segment" and man["version"] == 1
+    assert set(man["arrays"]) >= {"xs", "starts", "mbrs",
+                                  "page_zmin", "page_zmax"}
+    # reopening yields bit-identical metadata and rows
+    again = open_segment(seg_path, verify="meta")
+    np.testing.assert_array_equal(np.asarray(seg.xs), np.asarray(again.xs))
+    for attr in ("starts", "mbrs", "sort_dims", "page_zmin", "page_zmax"):
+        np.testing.assert_array_equal(getattr(seg, attr), getattr(again, attr))
+
+
+@pytest.mark.parametrize("victim", ["xs.bin", "page_zmin.bin"])
+def test_corrupted_checksum_raises(seg_path, tmp_path, victim):
+    import shutil
+    bad = str(tmp_path / "bad")
+    shutil.copytree(seg_path, bad)
+    p = os.path.join(bad, victim)
+    with open(p, "r+b") as f:
+        f.seek(100)
+        byte = f.read(1)
+        f.seek(100)
+        f.write(bytes([byte[0] ^ 0xFF]))
+    with pytest.raises(StoreCorruptionError):
+        open_segment(bad, verify="full")
+    # metadata corruption is caught even under verify="meta"
+    if victim != "xs.bin":
+        with pytest.raises(StoreCorruptionError):
+            open_segment(bad, verify="meta")
+
+
+def test_truncated_array_raises(seg_path, tmp_path):
+    import shutil
+    bad = str(tmp_path / "trunc")
+    shutil.copytree(seg_path, bad)
+    p = os.path.join(bad, "starts.bin")
+    with open(p, "r+b") as f:
+        f.truncate(os.path.getsize(p) - 8)
+    with pytest.raises(StoreCorruptionError):
+        open_segment(bad, verify="none")  # size mismatch, not just CRC
+
+
+def test_writer_rejects_out_of_order_and_dedups(tmp_path):
+    from repro.core.curve import default_curve
+    from repro.store.segment import SegmentWriter
+    curve = default_curve(D, default_K(D))
+    rows = np.concatenate(list(iter_chunks(1000, 1000, seed=5, d=D)))
+    z = curve.encode_np(rows)
+    order = np.argsort(z, kind="stable")
+    w = SegmentWriter(str(tmp_path / "w"), curve=curve, page_rows=64)
+    w.append_sorted(rows[order], keys=z[order])
+    with pytest.raises(ValueError):
+        w.append_sorted(rows[order][:4], keys=z[order][:4])  # below watermark
+    # duplicate rows are dropped (first occurrence wins)
+    w2 = SegmentWriter(str(tmp_path / "w2"), curve=curve, page_rows=64)
+    dup = np.repeat(rows[order], 2, axis=0)
+    w2.append_sorted(dup, keys=np.repeat(z[order], 2))
+    w2.finalize()
+    seg = open_segment(str(tmp_path / "w2"))
+    assert seg.n == len(rows)
+
+
+def test_write_segment_from_index_identical_paging(oracle, tmp_path):
+    db, rows = oracle
+    path = write_segment_from_index(db.index, str(tmp_path / "persisted"))
+    seg = open_segment(path)
+    idx = seg.as_index()
+    np.testing.assert_array_equal(idx.page_zmin, db.index.page_zmin)
+    np.testing.assert_array_equal(idx.page_zmax, db.index.page_zmax)
+    np.testing.assert_array_equal(np.asarray(idx.xs), np.asarray(db.index.xs))
+
+
+# ---------------------------------------------------------------------------
+# oracle parity: every query kind bit-identical to the in-memory Database
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def store_db(seg_path):
+    db = Database.from_segment(seg_path, verify="full")
+    db.engine("store", EngineConfig(q_chunk=8, group_pages=16,
+                                    cache_bytes=1 << 22))
+    return db
+
+
+@pytest.mark.parametrize("engine", ["cpu", "store"])
+def test_count_parity(store_db, oracle, engine):
+    db, rows = oracle
+    Ls, Us = _workload(rows)
+    want = db.query(Count(Ls, Us), engine="cpu")
+    got = store_db.query(Count(Ls, Us), engine=engine)
+    assert got.exact and got.engine == engine
+    np.testing.assert_array_equal(got.counts, want.counts)
+
+
+@pytest.mark.parametrize("engine", ["cpu", "store"])
+def test_range_parity(store_db, oracle, engine):
+    db, rows = oracle
+    Ls, Us = _workload(rows, seed=12)
+    want = db.query(Range(Ls, Us), engine="cpu")
+    got = store_db.query(Range(Ls, Us), engine=engine)
+    assert got.exact
+    np.testing.assert_array_equal(got.offsets, want.offsets)
+    np.testing.assert_array_equal(got.rows, want.rows)
+
+
+@pytest.mark.parametrize("engine", ["cpu", "store"])
+def test_point_parity(store_db, oracle, engine):
+    db, rows = oracle
+    present = rows[::911]
+    absent = (present ^ np.uint64(1)) + np.uint64(2)  # very likely absent
+    xs = np.concatenate([present, absent])
+    want = db.query(Point(xs), engine="cpu")
+    got = store_db.query(Point(xs), engine=engine)
+    np.testing.assert_array_equal(got.found, want.found)
+    assert got.found[:len(present)].all()
+
+
+@pytest.mark.parametrize("engine", ["cpu", "store"])
+@pytest.mark.parametrize("metric", ["l2", "linf"])
+def test_knn_parity(store_db, oracle, engine, metric):
+    db, rows = oracle
+    centers = rows[::2500]
+    want = db.query(Knn(centers, k=7, metric=metric), engine="cpu")
+    got = store_db.query(Knn(centers, k=7, metric=metric), engine=engine)
+    np.testing.assert_array_equal(got.offsets, want.offsets)
+    np.testing.assert_array_equal(got.neighbors, want.neighbors)
+    np.testing.assert_array_equal(got.dists, want.dists)
+
+
+def test_overflow_escalation_stays_exact_on_store(seg_path, oracle):
+    """max_cand=1 forces first-pass overflow; the store engine's escalation
+    (and CPU net over the memmap) must still be bit-exact."""
+    db, rows = oracle
+    Ls, Us = _workload(rows, seed=13)
+    sdb = Database.from_segment(seg_path, verify="none")
+    sdb.engine("store", EngineConfig(q_chunk=8, max_cand=1, group_pages=16))
+    got = sdb.query(Count(Ls, Us))
+    want = db.query(Count(Ls, Us), engine="cpu")
+    assert got.exact
+    np.testing.assert_array_equal(got.counts, want.counts)
+
+
+# ---------------------------------------------------------------------------
+# cache accounting: hits+misses==lookups, resident bytes never over budget
+# ---------------------------------------------------------------------------
+
+
+def test_cache_eviction_accounting(seg_path):
+    seg = open_segment(seg_path, verify="none")
+    G = 8
+    budget = 3 * seg.group_nbytes(G)  # room for exactly 3 groups
+    cache = PageGroupCache(seg, group_pages=G, budget_bytes=budget)
+    ngroups = seg.num_groups(G)
+    assert ngroups > 6
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        k = int(rng.integers(1, 3))
+        gs = sorted(rng.choice(ngroups, size=k, replace=False).tolist())
+        blocks = cache.get(gs)
+        assert len(blocks) == len(gs)
+        assert cache.resident_bytes <= budget          # hard bound, always
+        assert cache.resident_groups * seg.group_nbytes(G) \
+            == cache.resident_bytes
+    st = cache.stats
+    assert st.hits + st.misses == st.lookups
+    assert st.misses >= cache.resident_groups           # every resident group
+    assert st.evictions > 0                             # budget forced churn
+    cache.clear()
+    assert cache.resident_bytes == 0 and cache.resident_groups == 0
+
+
+def test_cache_over_budget_request_bypasses(seg_path):
+    seg = open_segment(seg_path, verify="none")
+    G = 8
+    cache = PageGroupCache(seg, group_pages=G,
+                           budget_bytes=seg.group_nbytes(G))  # 1-group budget
+    blocks = cache.get(list(range(min(4, seg.num_groups(G)))))
+    assert len(blocks) >= 2
+    assert cache.resident_bytes <= seg.group_nbytes(G)
+    assert cache.stats.bypass > 0   # overflow groups served transiently
+
+
+def test_cache_rejects_sub_block_budget(seg_path):
+    seg = open_segment(seg_path, verify="none")
+    with pytest.raises(ValueError):
+        PageGroupCache(seg, group_pages=8,
+                       budget_bytes=seg.group_nbytes(8) - 1)
+
+
+def test_cache_blocks_are_dead_padded(seg_path):
+    seg = open_segment(seg_path, verify="none")
+    G = 16
+    cache = PageGroupCache(seg, group_pages=G, budget_bytes=1 << 24)
+    last = seg.num_groups(G) - 1
+    blk = cache.get([last])[0]
+    live = seg.num_pages - last * G
+    size = np.asarray(blk.page_size)
+    assert (size[live:] == 0).all()         # dead pages carry no rows
+    assert (size[:live] > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# staleness: the store engine serves an immutable snapshot
+# ---------------------------------------------------------------------------
+
+
+def test_store_engine_raises_on_stale(seg_path):
+    db = Database.from_segment(seg_path, verify="none")
+    db.engine("store", EngineConfig(group_pages=16))
+    rows = np.concatenate(list(iter_chunks(64, 64, seed=3, d=D)))
+    q = Count(rows[:2], rows[:2])
+    db.query(q)                                   # fresh: fine
+    db.insert((rows[:1] + np.uint64(1)) | np.uint64(1))
+    with pytest.raises(StaleServingError):
+        db.query(q, engine="store")
+    # CPU engine stays delta-exact over the memmap-backed index
+    res = db.query(q, engine="cpu")
+    assert res.exact
+    # serve_stale opt-in: snapshot answers, no error
+    db.engine("store", EngineConfig(group_pages=16, on_stale="serve_stale"))
+    res2 = db.query(q, engine="store")
+    np.testing.assert_array_equal(res2.counts, res.counts)
+
+
+def test_rebuild_detaches_segment(seg_path):
+    db = Database.from_segment(seg_path, verify="none")
+    db.engine("store", EngineConfig(group_pages=16))
+    db.insert(np.asarray([[1, 2, 3]], dtype=np.uint64))
+    db.rebuild()
+    assert db.segment is None
+    assert "store" not in db.engines
+    # rebuilt database serves the inserted row from memory
+    res = db.query(Point(np.asarray([[1, 2, 3]], dtype=np.uint64)))
+    assert res.found.all()
+
+
+# ---------------------------------------------------------------------------
+# npy shard ingestion
+# ---------------------------------------------------------------------------
+
+
+def test_iter_npy_shards_build_matches_generator_build(seg_path, tmp_path):
+    paths = []
+    for i, c in enumerate(iter_chunks(N, CHUNK, seed=3, d=D)):
+        p = str(tmp_path / f"shard{i}.npy")
+        np.save(p, c)
+        paths.append(p)
+    path2 = str(tmp_path / "seg2")
+    build_segment(iter_npy_shards(paths), path2, page_rows=128)
+    a, b = open_segment(seg_path), open_segment(path2)
+    np.testing.assert_array_equal(np.asarray(a.xs), np.asarray(b.xs))
+    np.testing.assert_array_equal(a.starts, b.starts)
+    np.testing.assert_array_equal(a.page_zmin, b.page_zmin)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline satellite: select() through the Database range path
+# ---------------------------------------------------------------------------
+
+
+def test_indexed_dataset_select_verified_against_mask():
+    from repro.data.pipeline import IndexedDataset, synth_corpus
+    docs, meta = synth_corpus(400, vocab=64, max_len=128, seed=0)
+    ds = IndexedDataset(docs, meta, seed=0, verify_selects=True)
+    # verify_selects raises internally on any mismatch with the full mask
+    ids = ds.select((0.2, 0.0, 0.5, 0.0), (0.9, 1.0, 1.0, 0.8))
+    assert len(ids) > 0 and np.all(np.diff(ids) > 0)
+    empty = ds.select((0.99, 0.99, 0.99, 0.99), (1.0, 1.0, 1.0, 1.0))
+    assert isinstance(empty, np.ndarray)
